@@ -1,0 +1,72 @@
+"""Beyond-paper ablations (the paper's own future-work items):
+
+1. Imperfect CSI (paper §9 defers this): accuracy vs gain-estimation error.
+2. Server-guided top-k vs rand_k compression (paper §9 "other compression
+   methods"): top-k of |Delta_hat_{t-1}| keeps the shared-subcarrier
+   alignment AirComp requires while concentrating the budget on the
+   highest-energy coordinates.
+3. Error feedback [28-30] on top of rand_k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import build_problem, scaled_channel
+from repro.configs import PFELSConfig
+from repro.fl import evaluate, make_round_fn, setup
+
+
+def _run_variant(problem, *, rounds=30, eps=1.0, p=0.3, seed=0, **kw):
+    params, d, unravel, (x, y, xt, yt), loss_fn = problem
+    chan = kw.pop("channel", None) or scaled_channel(d)
+    cfg = PFELSConfig(num_clients=60, clients_per_round=8, local_steps=5,
+                      local_lr=0.05, compression_ratio=p, epsilon=eps,
+                      rounds=rounds, momentum=0.9, channel=chan, **kw)
+    state = setup(jax.random.PRNGKey(1), params, cfg, d)
+    fn = make_round_fn(cfg, loss_fn, d, unravel)
+    pm = params
+    res = state.residuals
+    prev = jnp.zeros((d,)) if cfg.randk_mode == "server_topk" else None
+    t0 = time.time()
+    for t in range(rounds):
+        key = jax.random.PRNGKey(seed * 999 + t)
+        if cfg.error_feedback:
+            pm, m, res = fn(pm, state.power_limits, x, y, key, res, prev)
+        else:
+            pm, m = fn(pm, state.power_limits, x, y, key, None, prev)
+        if prev is not None:
+            prev = m["delta_hat"]
+    _, acc = evaluate(pm, loss_fn, xt, yt)
+    return acc, (time.time() - t0) / rounds * 1e6
+
+
+def run(rounds=30):
+    problem = build_problem()
+    d = problem[1]
+    rows = []
+
+    # 1) imperfect CSI sweep
+    for err in (0.0, 0.05, 0.1, 0.2):
+        base = scaled_channel(d)
+        chan = dataclasses.replace(base, csi_error=err)
+        acc, us = _run_variant(problem, rounds=rounds, channel=chan)
+        print(f"beyond csi_err={err:.2f} acc={acc:.3f}", flush=True)
+        rows.append((f"beyond_csi{err}", us, f"acc={acc:.3f}"))
+
+    # 2) compression method ablation at tight budget
+    for mode, ef in (("exact", False), ("server_topk", False),
+                     ("exact", True)):
+        acc, us = _run_variant(problem, rounds=rounds, p=0.1, eps=1.0,
+                               randk_mode=mode, error_feedback=ef)
+        tag = f"{mode}{'+ef' if ef else ''}"
+        print(f"beyond compression={tag} (p=0.1) acc={acc:.3f}", flush=True)
+        rows.append((f"beyond_{tag}", us, f"acc={acc:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Paper Fig. 3: test accuracy vs compression ratio p for PFELS.
+
+Claim reproduced: accuracy first rises (compression error shrinks) then
+falls (privacy error grows) as p sweeps 0.1 -> 1.0.
+"""
+from __future__ import annotations
+
+from benchmarks.common import build_problem, run_fl
+
+P_GRID = (0.1, 0.3, 0.5, 0.8, 1.0)
+
+
+def run(rounds=30, eps=0.4, seeds=(0, 1, 2)):
+    problem = build_problem()
+    rows = []
+    for p in P_GRID:
+        r = run_fl("pfels", rounds=rounds, p=p, eps=eps, seeds=seeds,
+                   problem=problem)
+        rows.append((f"fig3_p{p}", r["us_per_round"],
+                     f"acc={r['accuracy']:.3f}"))
+        print(f"fig3 p={p:.1f} acc={r['accuracy']:.3f}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 4: test accuracy vs privacy budget eps for PFELS vs WFL-P /
+WFL-PDP / DP-FedAvg.
+
+Claims reproduced: (i) accuracy increases with eps for the DP schemes;
+(ii) PFELS >= WFL-PDP at the same eps; (iii) WFL-P upper-bounds WFL-PDP.
+"""
+from __future__ import annotations
+
+from benchmarks.common import build_problem, run_fl
+
+EPS_GRID = (0.5, 1.0, 2.0, 4.0)
+
+
+def run(rounds=40, seeds=(0, 1)):
+    problem = build_problem()
+    rows = []
+    base = run_fl("wfl_p", rounds=rounds, seeds=seeds, problem=problem)
+    rows.append(("fig4_wfl_p", base["us_per_round"],
+                 f"acc={base['accuracy']:.3f}"))
+    print(f"fig4 wfl_p acc={base['accuracy']:.3f}", flush=True)
+    for eps in EPS_GRID:
+        for alg in ("pfels", "wfl_pdp", "dp_fedavg"):
+            r = run_fl(alg, rounds=rounds, eps=eps, seeds=seeds,
+                       problem=problem)
+            rows.append((f"fig4_{alg}_eps{eps}", r["us_per_round"],
+                         f"acc={r['accuracy']:.3f}"))
+            print(f"fig4 {alg} eps={eps} acc={r['accuracy']:.3f}",
+                  flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle us/call.
+
+Wall-times on CPU are NOT the perf claim (interpret mode runs the kernel
+body in Python); this benchmark validates the call path and records the
+oracle cost — the TPU perf story lives in the roofline analysis.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.clip_norm.ops import clip_flat
+from repro.kernels.flash_attn.ops import attention
+from repro.kernels.randk_gather.ops import gather_rows
+from repro.kernels.ssd_scan.ops import ssd_scan
+
+
+def _time(f, *args, reps=5):
+    f(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    d = 128 * 2048
+    delta = jax.random.normal(key, (d,))
+    idx = jax.random.permutation(key, d // 128)[: d // 128 // 4]
+    for use_kernel, tag in ((False, "ref"), (True, "pallas_interp")):
+        us = _time(lambda: gather_rows(delta, idx, 1.5,
+                                       use_kernel=use_kernel))
+        rows.append((f"randk_gather_{tag}", us, f"d={d}"))
+
+    x = 3 * jax.random.normal(key, (d,))
+    for use_kernel, tag in ((False, "ref"), (True, "pallas_interp")):
+        us = _time(lambda: clip_flat(x, 1.0, use_kernel=use_kernel))
+        rows.append((f"clip_norm_{tag}", us, f"d={d}"))
+
+    b, s, h, p, n = 2, 512, 4, 64, 64
+    ks = jax.random.split(key, 5)
+    xs = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bm = jax.random.normal(ks[3], (b, s, n)) / 8
+    cm = jax.random.normal(ks[4], (b, s, n)) / 8
+    for use_kernel, tag in ((False, "ref"), (True, "pallas_interp")):
+        us = _time(lambda: ssd_scan(xs, dt, a, bm, cm, chunk=128,
+                                    use_kernel=use_kernel), reps=2)
+        rows.append((f"ssd_scan_{tag}", us, f"b{b}s{s}h{h}p{p}n{n}"))
+
+    qf = jax.random.normal(key, (1, 512, 8, 64))
+    kf = jax.random.normal(key, (1, 512, 2, 64))
+    for use_kernel, tag in ((False, "ref"), (True, "pallas_interp")):
+        us = _time(lambda: attention(qf, kf, kf, use_kernel=use_kernel),
+                   reps=2)
+        rows.append((f"flash_attn_{tag}", us, "b1s512h8kv2d64"))
+
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Roofline table from the dry-run records (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and prints, per (arch x shape), the three
+roofline terms, the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(out_dir="experiments/dryrun", tag="pod"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{tag}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def write_markdown(recs, path="experiments/roofline_table.md"):
+    lines = [
+        "# Roofline — single-pod 16x16 (256 chips), baseline configs",
+        "",
+        "| arch | shape | t_compute (ms) | t_memory (ms) | t_collective "
+        "(ms) | dominant | useful | mem/dev (GiB) |",
+        "|---|---|---:|---:|---:|---|---:|---:|",
+    ]
+    for r in recs:
+        t = r["roofline"]
+        gb = r["memory"]["peak_bytes_per_device"] / 2 ** 30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['t_compute_s']*1e3:.2f} "
+            f"| {t['t_memory_s']*1e3:.2f} | {t['t_collective_s']*1e3:.2f} "
+            f"| {t['dominant']} | {r['useful_flops_ratio']:.2f} "
+            f"| {gb:.2f} |")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return path
+
+
+def run(out_dir="experiments/dryrun", tag="pod"):
+    recs = load_records(out_dir, tag)
+    rows = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'t_comp_ms':>10s} {'t_mem_ms':>10s}"
+           f" {'t_coll_ms':>10s} {'dom':>10s} {'useful':>7s} {'mem/dev':>8s}")
+    print(hdr)
+    for r in recs:
+        t = r["roofline"]
+        gb = r["memory"]["peak_bytes_per_device"] / 2 ** 30
+        line = (f"{r['arch']:22s} {r['shape']:12s}"
+                f" {t['t_compute_s']*1e3:10.2f} {t['t_memory_s']*1e3:10.2f}"
+                f" {t['t_collective_s']*1e3:10.2f} {t['dominant']:>10s}"
+                f" {r['useful_flops_ratio']:7.2f} {gb:7.2f}G")
+        print(line)
+        rows.append((f"roofline_{r['arch']}_{r['shape']}",
+                     t["t_compute_s"] * 1e6,
+                     f"dom={t['dominant']};useful="
+                     f"{r['useful_flops_ratio']:.2f}"))
+    if recs:
+        try:
+            write_markdown(recs)
+        except OSError:
+            pass
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds/seeds (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,table2,fig5,fig7,beyond,kernels,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (beyond_paper, fig3_compression,
+                            fig4_privacy_accuracy, fig5_comm, fig7_energy,
+                            kernel_bench, roofline, table2_summary)
+
+    rounds = 12 if args.quick else 30
+    seeds = (0,) if args.quick else (0, 1, 2)
+    jobs = {
+        "fig3": lambda: fig3_compression.run(rounds=rounds, seeds=seeds),
+        "fig4": lambda: fig4_privacy_accuracy.run(
+            rounds=rounds, seeds=seeds[:2] if len(seeds) > 1 else seeds),
+        "table2": lambda: table2_summary.run(rounds=rounds, seeds=seeds),
+        "fig5": lambda: fig5_comm.run(rounds=rounds),
+        "fig7": lambda: fig7_energy.run(rounds=rounds),
+        "beyond": lambda: beyond_paper.run(rounds=rounds),
+        "kernels": kernel_bench.run,
+        "roofline": roofline.run,
+    }
+    only = args.only.split(",") if args.only else list(jobs)
+    rows = []
+    for name in only:
+        print(f"== {name} ==", flush=True)
+        try:
+            rows.extend(jobs[name]())
+        except FileNotFoundError as e:  # roofline before dry-run
+            print(f"skipped {name}: {e}", file=sys.stderr)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Tables 2/3: accuracy / subcarriers / energy for PFELS vs WFL-P vs
+WFL-PDP at a fixed privacy budget.
+
+Claims reproduced: PFELS attains >= baseline accuracy with fewer
+subcarriers and lower transmit energy.
+"""
+from __future__ import annotations
+
+from benchmarks.common import build_problem, run_fl
+
+
+def run(rounds=40, eps=1.5, seeds=(0, 1, 2)):
+    problem = build_problem()
+    rows = []
+    print(f"{'alg':10s} {'acc':>6s} {'subcarriers':>11s} {'energy':>10s}")
+    for alg in ("pfels", "wfl_p", "wfl_pdp"):
+        r = run_fl(alg, rounds=rounds, eps=eps, seeds=seeds,
+                   problem=problem)
+        print(f"{alg:10s} {r['accuracy']:6.3f} {r['subcarriers']:11d} "
+              f"{r['energy']:10.3e}", flush=True)
+        rows.append((f"table2_{alg}", r["us_per_round"],
+                     f"acc={r['accuracy']:.3f};sub={r['subcarriers']};"
+                     f"energy={r['energy']:.3e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

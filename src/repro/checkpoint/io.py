@@ -1,0 +1,54 @@
+"""Checkpointing: pytrees -> npz (flattened key paths) + JSON metadata."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub" or str(arr.dtype) == "bfloat16":
+            # npz cannot serialise extension dtypes (bfloat16): widen
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, tree, meta: Dict[str, Any] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path if path.endswith(".npz") else path + ".npz",
+             **_flatten(tree))
+    if meta is not None:
+        with open(os.path.splitext(path)[0] + ".json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def restore(path: str, like) -> Any:
+    """Restore into the structure of `like` (shape/dtype template)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_like = _flatten(like)
+    assert set(data.files) == set(flat_like), (
+        "checkpoint keys mismatch:",
+        set(data.files) ^ set(flat_like))
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)
+    restored = []
+    for path_elems, leaf in leaves_paths[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_elems)
+        restored.append(np.asarray(data[key]).astype(leaf.dtype))
+    return jax.tree.unflatten(leaves_paths[1], restored)
+
+
+def load_meta(path: str) -> Dict[str, Any]:
+    with open(os.path.splitext(path)[0] + ".json") as f:
+        return json.load(f)

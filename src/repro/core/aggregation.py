@@ -1,0 +1,99 @@
+"""AirComp aggregation — simulation (exact, Alg. 2) and production
+(pod-level psum) modes. See DESIGN.md §3 for the TPU mapping.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ChannelConfig
+from repro.core import channel as chan
+from repro.core import randk
+
+
+# ------------------------------------------------------------- simulation
+
+def aircomp_aggregate(updates_flat, idx, gains, beta, noise_key, *,
+                      d: int, sigma0: float, r: int,
+                      unbiased_rescale: bool = False,
+                      gains_est=None):
+    """Exact Alg. 2 lines 12–16.
+
+    updates_flat: (r, d) per-client updates Delta_i; idx: (k,) rand_k subset;
+    gains: (r,) |h_i|. Clients transmit x_i = (beta/|h_i|) A Delta_i, the MAC
+    superposes with gains, noise is added, the server reconstructs
+    Delta_hat = A^T y / (r beta).
+
+    gains_est (beyond paper): the gains each client BELIEVES it has
+    (imperfect CSI); precompensation uses gains_est while the physical MAC
+    applies the true gains, leaving per-client misalignment h/h_est.
+
+    Returns (delta_hat (d,), energy, y (k,)).
+    """
+    k = idx.shape[0]
+    proj = jax.vmap(lambda u: randk.project(u, idx))(updates_flat)  # (r, k)
+    comp = gains_est if gains_est is not None else gains
+    signals = (beta / comp)[:, None] * proj                         # x_i
+    noise = sigma0 * jax.random.normal(noise_key, (k,))
+    y = chan.receive(signals, gains, noise)                         # (k,)
+    delta_hat = randk.unproject(y, idx, d) / (r * beta)
+    if unbiased_rescale:
+        delta_hat = delta_hat * (d / k)
+    energy = jnp.sum(signals.astype(jnp.float32) ** 2)
+    return delta_hat, energy, y
+
+
+def dp_fedavg_aggregate(updates_flat, clip: float, sigma: float, noise_key, *,
+                        r: int):
+    """DP-FedAvg baseline (Alg. 1 line 11/13): per-client clip + Gaussian
+    noise N(0, C^2 sigma^2 I / r) per client, then average."""
+    norms = jnp.linalg.norm(updates_flat, axis=1, keepdims=True)
+    clipped = updates_flat / jnp.maximum(1.0, norms / clip)
+    noise = clip * sigma / jnp.sqrt(r) * jax.random.normal(
+        noise_key, updates_flat.shape[1:])
+    return jnp.mean(clipped, axis=0) + noise
+
+
+def fedavg_aggregate(updates_flat):
+    return jnp.mean(updates_flat, axis=0)
+
+
+# ------------------------------------------------------------- production
+
+def pfels_production_aggregate(update_tree, masks, *, beta, r: int,
+                               sigma0: float, noise_key,
+                               axis_name: Optional[str] = None,
+                               unbiased_rescale: bool = False,
+                               compression_p: float = 1.0):
+    """PFELS aggregation for pod-scale clients (DESIGN.md §3).
+
+    Each client (pod) holds `update_tree` = its clipped local update. The
+    transform is: mask -> scale by beta -> psum over `axis_name` (the AirComp
+    superposition; the channel gain is pre-inverted so the received signal is
+    beta * A Delta_i) -> + channel noise on the transmitted coordinates ->
+    unscale by 1/(r beta).
+
+    Inside a shard_map manual over `axis_name`; pass axis_name=None for the
+    single-pod degenerate case (r=1 client, noise still applied).
+    """
+    masked = randk.apply_mask_tree(update_tree, masks)
+    scaled = jax.tree.map(lambda x: x * beta, masked)
+    if axis_name is not None:
+        summed = jax.tree.map(lambda x: jax.lax.psum(x, axis_name), scaled)
+    else:
+        summed = scaled
+    leaves, treedef = jax.tree.flatten(summed)
+    mask_leaves = jax.tree.leaves(masks)
+    keys = jax.random.split(noise_key, len(leaves))
+    noisy = [
+        x + sigma0 * mask.astype(x.dtype)
+        * jax.random.normal(k, x.shape, jnp.float32).astype(x.dtype)
+        for x, mask, k in zip(leaves, mask_leaves, keys)
+    ]
+    out = jax.tree.unflatten(treedef, noisy)
+    scale = 1.0 / (r * beta)
+    if unbiased_rescale:
+        scale = scale / compression_p
+    return jax.tree.map(lambda x: x * scale, out)

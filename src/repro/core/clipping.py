@@ -1,0 +1,17 @@
+"""Gradient / update clipping (paper Assumption 1 via [21])."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, clip: float):
+    """x <- x / max(1, ||x||/C). Returns (clipped, pre-clip norm)."""
+    nrm = global_norm(tree)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), nrm

@@ -1,0 +1,57 @@
+"""Convergence-optimized power control under DP (paper §7).
+
+Theorem 5 (PFELS):
+    beta*_t = min_i min( |h_i| sqrt(d P_i) / (C1 eta tau sqrt(k)),  eps/C2 )
+
+Baselines:
+    WFL-P   (Eq. 36): beta_t = min_i |h_i| sqrt(P_i) / (C1 eta tau)
+    WFL-PDP (Eq. 37): beta_t = min( WFL-P beta, eps/C2 )
+
+Lemma 5 bound used for the power term: E||A Delta||^2 <= (k/d) eta^2 tau^2 C1^2,
+so the per-device power constraint E||x_i||^2 = (beta/|h_i|)^2 E||A Delta||^2
+<= P_i resolves to Eq. (34c).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import privacy
+
+
+def beta_power_cap(gains, power_limits, d: int, k: int, c1: float,
+                   eta: float, tau: int):
+    """Eq. (34c): min_i |h_i| sqrt(d P_i) / (C1 eta tau sqrt(k))."""
+    per = gains * jnp.sqrt(float(d) * power_limits) / (c1 * eta * tau
+                                                       * jnp.sqrt(float(k)))
+    return jnp.min(per)
+
+
+def beta_pfels(gains, power_limits, *, d: int, k: int, c1: float, eta: float,
+               tau: int, epsilon: float, r: int, n: int, delta: float,
+               sigma0: float):
+    """Theorem 5: the optimal per-round alignment coefficient."""
+    cap_power = beta_power_cap(gains, power_limits, d, k, c1, eta, tau)
+    cap_priv = privacy.beta_privacy_cap(epsilon, eta, tau, c1, r, n, delta,
+                                        sigma0)
+    return jnp.minimum(cap_power, cap_priv)
+
+
+def beta_wfl_p(gains, power_limits, *, c1: float, eta: float, tau: int):
+    """Eq. (36): full updates (k=d), no DP constraint."""
+    per = gains * jnp.sqrt(power_limits) / (c1 * eta * tau)
+    return jnp.min(per)
+
+
+def beta_wfl_pdp(gains, power_limits, *, c1: float, eta: float, tau: int,
+                 epsilon: float, r: int, n: int, delta: float, sigma0: float):
+    """Eq. (37): full updates + DP constraint."""
+    cap_power = beta_wfl_p(gains, power_limits, c1=c1, eta=eta, tau=tau)
+    cap_priv = privacy.beta_privacy_cap(epsilon, eta, tau, c1, r, n, delta,
+                                        sigma0)
+    return jnp.minimum(cap_power, cap_priv)
+
+
+def transmit_energy(beta, gains, signal_sq_norms):
+    """Per-round transmit energy Sum_i ||x_i||^2 with x_i = (beta/|h_i|) A d_i:
+    signal_sq_norms: (r,) ||A Delta_i||^2."""
+    return jnp.sum((beta / gains) ** 2 * signal_sq_norms)

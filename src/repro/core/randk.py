@@ -1,0 +1,68 @@
+"""rand_k sparsification (paper Eq. 9, Lemma 1, Lemma 10).
+
+Two modes:
+  - "exact": a uniformly random k-subset omega of [d]; A^t is the 0/1
+    projection selecting those coordinates. Used at simulation scale and by
+    the Pallas kernels.
+  - "mask": seeded Bernoulli(p) masks per parameter tensor — the
+    large-model formulation (same shared-PRNG trick the paper uses to avoid
+    transmitting A^t; identical first moment, see DESIGN.md §3).
+
+Key identities (tested):
+  E_omega[A^T A x] = (k/d) x                     (Lemma 10)
+  E_omega ||A^T A x - x||^2 = (1 - k/d) ||x||^2  (Lemma 10)
+  E ||A x||^2 = (k/d) ||x||^2                    (Lemma 5 core)
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_indices(key, d: int, k: int) -> jnp.ndarray:
+    """omega: a uniformly random k-subset of [d] (without replacement)."""
+    return jax.random.permutation(key, d)[:k]
+
+
+def project(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """A^t x: gather the k selected coordinates. x: (d,) -> (k,)."""
+    return jnp.take(x, idx, axis=0)
+
+
+def unproject(y: jnp.ndarray, idx: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(A^t)^T y: scatter k values back into d dims (zeros elsewhere)."""
+    return jnp.zeros((d,), y.dtype).at[idx].set(y)
+
+
+def sparsify(x: jnp.ndarray, idx: jnp.ndarray, d: int) -> jnp.ndarray:
+    """(A^t)^T A^t x: keep only the selected coordinates of x."""
+    return unproject(project(x, idx), idx, d)
+
+
+# ------------------------------------------------------------- mask mode
+
+def mask_tree(key, tree, p: float):
+    """Seeded Bernoulli(p) mask per tensor (large-model rand_k surrogate).
+    The same key yields the same masks on every client — the shared-seed
+    broadcast of A^t from the paper."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    masks = [
+        jax.random.bernoulli(k, p, l.shape) for k, l in zip(keys, leaves)
+    ]
+    return jax.tree.unflatten(treedef, masks)
+
+
+def apply_mask_tree(tree, masks):
+    return jax.tree.map(lambda x, m: x * m.astype(x.dtype), tree, masks)
+
+
+def compression_ratio_of(k: int, d: int) -> float:
+    return k / d
+
+
+def lambda_k(k: int, d: int) -> float:
+    """lambda_k := 1 - k/d (Thm 4 compression-error coefficient)."""
+    return 1.0 - k / d

@@ -1,0 +1,6 @@
+from repro.data.loader import epoch_batches, sample_batch
+from repro.data.synthetic import (make_federated_classification,
+                                  make_lm_sequences, make_prototypes)
+
+__all__ = ["epoch_batches", "sample_batch", "make_federated_classification",
+           "make_lm_sequences", "make_prototypes"]

@@ -1,0 +1,15 @@
+"""Minibatch sampling inside jit (stateless, key-driven)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_batch(key, x, y, batch_size: int):
+    idx = jax.random.randint(key, (batch_size,), 0, x.shape[0])
+    return {"x": x[idx], "y": y[idx]}
+
+
+def epoch_batches(n: int, batch_size: int):
+    """Static batch count for one epoch (paper runs tau epochs/round)."""
+    return max(n // batch_size, 1)

@@ -1,0 +1,72 @@
+"""Synthetic federated datasets.
+
+The paper evaluates on CIFAR-10 (IID split over 1000 devices) and FEMNIST
+(naturally non-IID). Offline we generate *learnable* synthetic stand-ins:
+class-prototype images + Gaussian noise, partitioned IID or with Dirichlet
+label skew (the standard non-IID FL protocol). Trends — not absolute
+accuracies — are the reproduction target (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_prototypes(key, num_classes: int, image_shape, scale: float = 1.0):
+    return scale * jax.random.normal(
+        key, (num_classes,) + tuple(image_shape), jnp.float32)
+
+
+def make_federated_classification(
+        key, *, n_clients: int, per_client: int, num_classes: int = 10,
+        image_shape=(1, 8, 8), noise: float = 0.6, alpha: float = None):
+    """Returns (x (N, n, C, H, W), y (N, n), test_x, test_y).
+
+    alpha=None -> IID label draw; else Dirichlet(alpha) label skew per client.
+    """
+    kp, kl, kn, kt = jax.random.split(key, 4)
+    protos = make_prototypes(kp, num_classes, image_shape)
+
+    if alpha is None:
+        y = jax.random.randint(kl, (n_clients, per_client), 0, num_classes)
+    else:
+        # per-client class distribution ~ Dirichlet(alpha)
+        probs = jax.random.dirichlet(
+            kl, alpha * jnp.ones((num_classes,)), (n_clients,))
+        y = jax.vmap(lambda k, p: jax.random.choice(
+            k, num_classes, (per_client,), p=p))(
+                jax.random.split(kl, n_clients), probs)
+
+    x = protos[y] + noise * jax.random.normal(
+        kn, (n_clients, per_client) + tuple(image_shape))
+
+    n_test = max(num_classes * 20, 200)
+    yt = jax.random.randint(kt, (n_test,), 0, num_classes)
+    xt = protos[yt] + noise * jax.random.normal(
+        jax.random.fold_in(kt, 1), (n_test,) + tuple(image_shape))
+    return x, y, xt, yt
+
+
+def make_lm_sequences(key, *, n_seqs: int, seq_len: int, vocab: int,
+                      order: int = 1):
+    """Synthetic LM data from a random Markov chain (learnable structure)."""
+    kt, ks, k0 = jax.random.split(key, 3)
+    logits = 2.0 * jax.random.normal(kt, (vocab, vocab))
+
+    def gen(key):
+        k0, kseq = jax.random.split(key)
+        first = jax.random.randint(k0, (), 0, vocab)
+
+        def step(tok, k):
+            nxt = jax.random.categorical(k, logits[tok])
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step, first,
+                               jax.random.split(kseq, seq_len - 1))
+        return jnp.concatenate([first[None], toks])
+
+    seqs = jax.vmap(gen)(jax.random.split(ks, n_seqs))
+    return seqs.astype(jnp.int32)

@@ -1,0 +1,6 @@
+from repro.fl.client import local_train, model_update
+from repro.fl.rounds import (FLState, evaluate, make_round_fn,
+                             round_epsilon_spent, setup)
+
+__all__ = ["local_train", "model_update", "FLState", "evaluate",
+           "make_round_fn", "round_epsilon_spent", "setup"]

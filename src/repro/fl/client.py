@@ -1,0 +1,44 @@
+"""Client-side local training (Alg. 2 lines 6–12): tau steps of clipped SGD
+(optionally with momentum, as in the paper's experiments §8.1)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.clipping import clip_by_global_norm
+from repro.data.loader import sample_batch
+
+
+def local_train(params, x, y, key, *, loss_fn: Callable, steps: int,
+                lr: float, clip: float, momentum: float = 0.0,
+                batch_size: int = 50):
+    """Run tau local steps; returns (new_params, mean_loss).
+
+    Assumption 1 (bounded gradient) is enforced by clipping each stochastic
+    gradient to C1 before the SGD step [21].
+    """
+    v0 = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def step(carry, k):
+        p, v = carry
+        batch = sample_batch(k, x, y, batch_size)
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, batch)
+        g, _ = clip_by_global_norm(g, clip)
+        v = jax.tree.map(lambda v_, g_: momentum * v_
+                         + g_.astype(jnp.float32), v, g)
+        p = jax.tree.map(lambda p_, v_: (p_.astype(jnp.float32)
+                                         - lr * v_).astype(p_.dtype), p, v)
+        return (p, v), loss
+
+    (p_new, _), losses = jax.lax.scan(step, (params, v0),
+                                      jax.random.split(key, steps))
+    return p_new, jnp.mean(losses)
+
+
+def model_update(params_before, params_after):
+    """Delta_i = theta_i^{t,tau} - theta^t (Alg. 2 line 11)."""
+    return jax.tree.map(lambda a, b: (a.astype(jnp.float32)
+                                      - b.astype(jnp.float32)),
+                        params_after, params_before)

@@ -1,0 +1,179 @@
+"""The full PFELS round (Alg. 2) and baselines, simulation mode.
+
+One jitted ``round_fn`` runs: sample r clients -> vmapped local training ->
+rand_k projection -> Theorem-5 power control -> AirComp over the simulated
+MAC -> server update. Baselines (WFL-P Eq. 36, WFL-PDP Eq. 37, DP-FedAvg
+Alg. 1, FedAvg) share the same structure with their own aggregation.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from repro.configs.base import PFELSConfig
+from repro.core import aggregation, channel, power_control, privacy, randk
+from repro.fl.client import local_train, model_update
+
+
+@dataclass
+class FLState:
+    params: Any
+    power_limits: jnp.ndarray       # (N,) P_i, fixed per device
+    residuals: Any = None           # (N, d) error-feedback memory [28-30]
+    round: int = 0
+
+
+def setup(key, params, cfg: PFELSConfig, d: int) -> FLState:
+    kp, = jax.random.split(key, 1)
+    p_lim = channel.sample_power_limits(kp, cfg.num_clients, d, cfg.channel)
+    res = (jnp.zeros((cfg.num_clients, d), jnp.float32)
+           if cfg.error_feedback else None)
+    return FLState(params=params, power_limits=p_lim, residuals=res)
+
+
+def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
+                  unravel: Callable):
+    """Builds the jitted round function.
+
+    loss_fn(params, {"x","y"}) -> (loss, aux). d = flat dim; unravel maps a
+    flat (d,) vector back to the params pytree.
+    """
+    k_coords = max(int(round(cfg.compression_ratio * d)), 1)
+    alg = cfg.algorithm
+    delta = cfg.resolved_delta()
+    sigma0 = cfg.channel.noise_std
+    r = cfg.clients_per_round
+
+    def round_fn(params, power_limits, data_x, data_y, key,
+                 residuals=None, prev_delta=None):
+        ks = jax.random.split(key, 7)
+        # ---- sample r clients without replacement (Alg. 2 line 2)
+        sel = jax.random.choice(ks[0], cfg.num_clients, (r,), replace=False)
+        cx, cy = data_x[sel], data_y[sel]
+        p_sel = power_limits[sel]
+
+        # ---- local training (lines 5-11), vmapped over clients
+        ck = jax.random.split(ks[1], r)
+        train = functools.partial(
+            local_train, loss_fn=loss_fn, steps=cfg.local_steps,
+            lr=cfg.local_lr, clip=cfg.clip, momentum=cfg.momentum)
+        new_params, losses = jax.vmap(
+            lambda x, y, k: train(params, x, y, k))(cx, cy, ck)
+        updates = jax.vmap(lambda np_: model_update(params, np_))(new_params)
+        flat_updates = jax.vmap(lambda u: ravel_pytree(u)[0])(updates)
+
+        # ---- error feedback [28-30] (beyond-paper option): add each
+        # selected client's residual memory to its update before
+        # sparsification; the untransmitted remainder is carried forward
+        if cfg.error_feedback and residuals is not None:
+            flat_updates = flat_updates + residuals[sel]
+
+        # ---- channel state for this round (§4.1)
+        gains = channel.sample_gains(ks[2], r, cfg.channel)
+
+        metrics: Dict[str, jnp.ndarray] = {
+            "train_loss": jnp.mean(losses),
+            "update_norm": jnp.mean(
+                jnp.linalg.norm(flat_updates, axis=1)),
+        }
+
+        # imperfect CSI (beyond paper): clients precompensate with noisy
+        # gain estimates while the MAC applies the true gains
+        gains_est = channel.estimate_gains(ks[6], gains, cfg.channel)
+
+        if alg in ("pfels", "wfl_p", "wfl_pdp"):
+            if alg == "pfels":
+                if cfg.randk_mode == "server_topk" and prev_delta is not None:
+                    # server-guided top-k (beyond paper): half the budget on
+                    # the top coords of |Delta_hat_{t-1}| (shared across
+                    # clients -> AirComp alignment preserved), half explored
+                    # uniformly — pure top-k locks its support (coords never
+                    # transmitted keep |Delta_hat|=0 and are never selected)
+                    k1 = k_coords // 2
+                    _, idx_top = jax.lax.top_k(jnp.abs(prev_delta), k1)
+                    scores = jax.random.uniform(ks[3], (d,))
+                    scores = scores.at[idx_top].set(-jnp.inf)
+                    _, idx_rand = jax.lax.top_k(scores, k_coords - k1)
+                    idx = jnp.concatenate([idx_top, idx_rand])
+                else:
+                    idx = randk.sample_indices(ks[3], d, k_coords)
+                beta = power_control.beta_pfels(
+                    gains, p_sel, d=d, k=k_coords, c1=cfg.clip,
+                    eta=cfg.local_lr, tau=cfg.local_steps,
+                    epsilon=cfg.epsilon, r=r, n=cfg.num_clients,
+                    delta=delta, sigma0=sigma0)
+                k_used = k_coords
+            else:
+                idx = jnp.arange(d)
+                k_used = d
+                if alg == "wfl_p":
+                    beta = power_control.beta_wfl_p(
+                        gains, p_sel, c1=cfg.clip, eta=cfg.local_lr,
+                        tau=cfg.local_steps)
+                else:
+                    beta = power_control.beta_wfl_pdp(
+                        gains, p_sel, c1=cfg.clip, eta=cfg.local_lr,
+                        tau=cfg.local_steps, epsilon=cfg.epsilon, r=r,
+                        n=cfg.num_clients, delta=delta, sigma0=sigma0)
+            delta_hat, energy, _ = aggregation.aircomp_aggregate(
+                flat_updates, idx, gains, beta, ks[4], d=d, sigma0=sigma0,
+                r=r, unbiased_rescale=cfg.unbiased_rescale,
+                gains_est=gains_est if cfg.channel.csi_error > 0 else None)
+            metrics.update(beta=beta, energy=energy,
+                           subcarriers=jnp.asarray(k_used))
+            if cfg.randk_mode == "server_topk":
+                metrics["delta_hat"] = delta_hat
+        elif alg == "dp_fedavg":
+            delta_hat = aggregation.dp_fedavg_aggregate(
+                flat_updates, cfg.clip, cfg.dp_fedavg_sigma, ks[4], r=r)
+            metrics.update(beta=jnp.asarray(0.0), energy=jnp.asarray(0.0),
+                           subcarriers=jnp.asarray(d))
+        else:  # fedavg
+            delta_hat = aggregation.fedavg_aggregate(flat_updates)
+            metrics.update(beta=jnp.asarray(0.0), energy=jnp.asarray(0.0),
+                           subcarriers=jnp.asarray(d))
+
+        # ---- error-feedback memory update: e_i <- u_i - A^T A u_i
+        new_residuals = residuals
+        if cfg.error_feedback and residuals is not None:
+            if alg == "pfels":
+                transmitted = jax.vmap(
+                    lambda u: randk.sparsify(u, idx, d))(flat_updates)
+            else:
+                transmitted = flat_updates
+            new_residuals = residuals.at[sel].set(
+                flat_updates - transmitted)
+
+        # ---- server update (line 16)
+        flat_params, _ = ravel_pytree(params)
+        new_flat = flat_params + delta_hat
+        if cfg.error_feedback:
+            return unravel(new_flat), metrics, new_residuals
+        return unravel(new_flat), metrics
+
+    return jax.jit(round_fn)
+
+
+def round_epsilon_spent(cfg: PFELSConfig, beta: float) -> float:
+    """Per-round eps actually consumed (Thm 3 inverse), for the ledger."""
+    return privacy.round_epsilon(
+        beta, cfg.local_lr, cfg.local_steps, cfg.clip,
+        cfg.clients_per_round, cfg.num_clients, cfg.resolved_delta(),
+        cfg.channel.noise_std)
+
+
+def evaluate(params, loss_fn, xt, yt, batch: int = 256):
+    """Test accuracy over the held-out set."""
+    n = xt.shape[0]
+    accs, losses = [], []
+    for i in range(0, n, batch):
+        loss, aux = loss_fn(params, {"x": xt[i:i + batch],
+                                     "y": yt[i:i + batch]})
+        accs.append(aux["accuracy"] * min(batch, n - i))
+        losses.append(loss * min(batch, n - i))
+    return (float(sum(losses)) / n, float(sum(accs)) / n)

@@ -1,0 +1,8 @@
+# TPU Pallas kernels for the paper's compute hot-spots:
+#   randk_gather     — A^t Delta + beta-scale (client transmit path)
+#   aircomp_combine  — (A^t)^T y / (r beta) scatter + unscale (server path)
+#   clip_norm        — fused two-pass l2 clip (Assumption 1)
+#   ssd_scan         — Mamba2 SSD chunk scan (ssm/hybrid archs)
+#   flash_attn       — flash-attention forward (prefill hot-spot)
+# Each: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
+# interpret=True on CPU), ref.py (pure-jnp oracle).

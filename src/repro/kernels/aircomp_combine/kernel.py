@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: AirComp server combine (Alg. 2 lines 15-16).
+
+Fuses (A^t)^T y / (r beta) with the global-model update: the received
+k-subcarrier payload is unscaled and scatter-added into theta in one pass.
+theta is aliased input->output (in-place rows); omega in SMEM via scalar
+prefetch; each index block updates its rows through VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _kernel(idx_ref, inv_ref, y_ref, theta_ref, out_ref):
+    """grid dim 0 walks index blocks. y_ref: (block, LANES) VMEM;
+    theta_ref/out_ref: (rows, LANES) ANY, aliased."""
+    i = pl.program_id(0)
+    block = y_ref.shape[0]
+    inv = inv_ref[0, 0]
+
+    def body(j, _):
+        row = idx_ref[i * block + j]
+        out_ref[row, :] = (theta_ref[row, :]
+                           + (y_ref[j, :] * inv).astype(out_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def aircomp_combine(theta_rows: jnp.ndarray, y_rows: jnp.ndarray,
+                    idx_rows: jnp.ndarray, inv_rbeta, *,
+                    block: int = 256, interpret: bool = True) -> jnp.ndarray:
+    """theta_rows: (R, 128); y_rows: (k_rows, 128); idx_rows: (k_rows,).
+    Returns theta with the reconstructed update added in-place."""
+    k_rows = idx_rows.shape[0]
+    if k_rows % block != 0:
+        block = k_rows
+    grid = (k_rows // block,)
+    inv2d = jnp.asarray(inv_rbeta, y_rows.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block, LANES), lambda i, *_: (i, 0)),
+                pl.BlockSpec(memory_space=pl.ANY),
+            ],
+            out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        ),
+        out_shape=jax.ShapeDtypeStruct(theta_rows.shape, theta_rows.dtype),
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(idx_rows, inv2d, y_rows, theta_rows)

@@ -1,0 +1,25 @@
+"""jit wrapper for the AirComp server combine kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.aircomp_combine.kernel import LANES, aircomp_combine
+from repro.kernels.aircomp_combine.ref import aircomp_combine_ref
+
+
+def combine(theta_flat: jnp.ndarray, y_payload: jnp.ndarray,
+            idx_rows: jnp.ndarray, r: int, beta, *,
+            interpret: bool = True, use_kernel: bool = True):
+    """theta_flat: (d,); y_payload: (k_rows*128,) received signal;
+    idx_rows: (k_rows,). Returns updated theta (d,)."""
+    d = theta_flat.shape[0]
+    assert d % LANES == 0
+    theta_rows = theta_flat.reshape(d // LANES, LANES)
+    y_rows = y_payload.reshape(-1, LANES)
+    inv = 1.0 / (r * beta)
+    if use_kernel:
+        out = aircomp_combine(theta_rows, y_rows, idx_rows, inv,
+                              interpret=interpret)
+    else:
+        out = aircomp_combine_ref(theta_rows, y_rows, idx_rows, inv)
+    return out.reshape(-1)

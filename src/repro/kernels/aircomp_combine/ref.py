@@ -1,0 +1,13 @@
+"""Oracle: server-side reconstruction Delta_hat = (A^t)^T y / (r beta),
+fused with the global-model add theta <- theta + Delta_hat (Alg. 2 15-16)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aircomp_combine_ref(theta_rows: jnp.ndarray, y_rows: jnp.ndarray,
+                        idx_rows: jnp.ndarray, inv_rbeta) -> jnp.ndarray:
+    """theta_rows: (R, 128); y_rows: (k_rows, 128) received subcarrier
+    payload; idx_rows: (k_rows,). Returns updated theta_rows."""
+    upd = y_rows * inv_rbeta
+    return theta_rows.at[idx_rows].add(upd.astype(theta_rows.dtype))

@@ -1,0 +1,63 @@
+"""Pallas TPU kernels: fused two-pass l2-norm clip.
+
+Pass 1 accumulates the squared norm across row blocks into a (1,1) SMEM-
+sized output (TPU grids are sequential, so cross-step accumulation into the
+same output block is the standard reduction idiom). Pass 2 rescales blocks
+by min(1, C/||x||).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _sumsq_kernel(x_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = jnp.zeros((), jnp.float32)
+
+    xf = x_ref[...].astype(jnp.float32)
+    out_ref[0, 0] += jnp.sum(xf * xf)
+
+
+def _scale_kernel(s_ref, x_ref, out_ref):
+    out_ref[...] = (x_ref[...].astype(jnp.float32)
+                    * s_ref[0, 0]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def clip_norm(x_rows: jnp.ndarray, clip: float, *, block: int = 512,
+              interpret: bool = True):
+    """x_rows: (R, 128). Returns (clipped (R,128), norm scalar)."""
+    r = x_rows.shape[0]
+    if r % block != 0:
+        block = r
+    grid = (r // block,)
+    sumsq = pl.pallas_call(
+        _sumsq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x_rows)
+    nrm = jnp.sqrt(sumsq[0, 0])
+    scale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12)
+                        ).reshape(1, 1).astype(jnp.float32)
+    out = pl.pallas_call(
+        _scale_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  pl.BlockSpec((block, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x_rows.shape, x_rows.dtype),
+        interpret=interpret,
+    )(scale, x_rows)
+    return out, nrm

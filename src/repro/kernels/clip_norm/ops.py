@@ -1,0 +1,21 @@
+"""jit wrapper: flat-vector l2 clip through the Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.clip_norm.kernel import LANES, clip_norm
+from repro.kernels.clip_norm.ref import clip_norm_ref
+
+
+def clip_flat(x_flat: jnp.ndarray, clip: float, *, interpret: bool = True,
+              use_kernel: bool = True):
+    d = x_flat.shape[0]
+    pad = (-d) % LANES
+    x = jnp.pad(x_flat, (0, pad)) if pad else x_flat
+    rows = x.reshape(-1, LANES)
+    if use_kernel:
+        out, nrm = clip_norm(rows, clip)
+    else:
+        out, nrm = clip_norm_ref(rows, clip)
+    out = out.reshape(-1)
+    return (out[:d] if pad else out), nrm

@@ -1,0 +1,10 @@
+"""Oracle: fused l2 clip x <- x * min(1, C/||x||) (Assumption 1)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def clip_norm_ref(x: jnp.ndarray, clip: float):
+    nrm = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+    return (x * scale).astype(x.dtype), nrm

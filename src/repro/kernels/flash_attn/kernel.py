@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: flash-attention forward (prefill hot-spot).
+
+Grid = (B*Hkv, n_q_blocks, n_kv_blocks), KV innermost: TPU grids execute
+sequentially, so the online-softmax state (m, l, acc) lives in VMEM scratch
+across KV steps for a fixed (bh, q-block) and is re-initialised when the
+q-block changes. Blocks are MXU-aligned (q/kv block x Dh tiles); the GQA
+group dim rides inside the q block (bq rows cover g query heads per KV
+head).
+
+This is the §Perf pair-C structure in kernel form: the accumulator never
+round-trips HBM between KV blocks (the jnp fallback pays that traffic,
+measured -15% step time from block 512→2048; the kernel removes it
+entirely on TPU).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window, sq: int, skv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # (bq, Dh)
+    k = k_ref[0].astype(jnp.float32)                # (bk, Dh)
+    v = v_ref[0].astype(jnp.float32)                # (bk, Dh)
+    bq, bk = q.shape[0], k.shape[0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    # absolute positions (suffix-aligned). GQA stacks g query heads along
+    # the row dim (g, Sq) -> row position = row % Sq
+    rq = (qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)) % sq \
+        + (skv - sq)
+    rk = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= rq >= rk
+    if window is not None:
+        mask &= rq - rk < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention_fwd(q, k, v, *, causal: bool = True, window=None,
+                        block_q: int = 256, block_kv: int = 256,
+                        interpret: bool = True):
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh) -> (B, Sq, H, Dh)."""
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(dh)
+    # fold (B, Hkv) into the leading grid dim; queries of one KV head's
+    # group are stacked along the row dim of the q block
+    qg = q.reshape(b, sq, hkv, g, dh).transpose(0, 2, 3, 1, 4) \
+        .reshape(b * hkv, g * sq, dh)
+    kg = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, dh)
+    vg = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, dh)
+
+    if skv % block_kv != 0:
+        block_kv = skv
+    # q blocks must not straddle head boundaries: clamp to sq and require
+    # divisibility, else fall back to one block per head
+    bq = min(block_q, sq)
+    if sq % bq != 0:
+        bq = sq
+    grid = (b * hkv, (g * sq) // bq, skv // block_kv)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, sq=sq, skv=skv)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g * sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg, vg)
+    return out.reshape(b, hkv, g, sq, dh).transpose(0, 3, 1, 2, 4) \
+        .reshape(b, sq, h, dh)

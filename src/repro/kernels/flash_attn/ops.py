@@ -1,0 +1,14 @@
+"""jit wrapper for the flash-attention forward kernel."""
+from __future__ import annotations
+
+from repro.kernels.flash_attn.kernel import flash_attention_fwd
+from repro.kernels.flash_attn.ref import attention_ref
+
+
+def attention(q, k, v, *, causal=True, window=None, interpret=True,
+              use_kernel=True, block_q=256, block_kv=256):
+    if use_kernel:
+        return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_kv=block_kv,
+                                   interpret=interpret)
+    return attention_ref(q, k, v, causal=causal, window=window)

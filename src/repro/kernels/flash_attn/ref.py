@@ -1,0 +1,29 @@
+"""Oracle: plain softmax attention (GQA, causal / windowed)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q: (B, Sq, H, Dh); k, v: (B, Skv, Hkv, Dh) -> (B, Sq, H, Dh).
+    Positions are aligned suffixes (prefill: Sq == Skv)."""
+    b, sq, h, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(dh)
+    iq = jnp.arange(sq)[:, None] + (skv - sq)
+    ik = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= iq >= ik
+    if window is not None:
+        mask &= iq - ik < window
+    s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: rand_k gather + power scale (Alg. 2 line 12).
+
+The transmit-path hot spot: x_i = (beta/|h_i|) * A^t Delta_i. The index
+vector omega lives in SMEM via PrefetchScalarGridSpec (the TPU idiom for
+data-dependent gathers); Delta stays in HBM/ANY and each index block DMA-
+gathers its rows through VMEM, fusing the scale.
+
+Layout: Delta is viewed as (d/L, L) rows of L=128 lanes; omega indexes ROWS
+(the paper's rand_k over coordinates maps to rand_k over 128-lane rows so
+gathers stay lane-aligned on the VPU — see DESIGN.md hardware adaptation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _kernel(idx_ref, scale_ref, delta_ref, out_ref):
+    """Grid dim 0 walks index blocks; rows gathered one DMA each.
+
+    idx_ref: (k_rows,) SMEM (scalar-prefetch); scale_ref: (1, 1) SMEM;
+    delta_ref: (rows, LANES) ANY; out_ref: (block, LANES) VMEM.
+    """
+    i = pl.program_id(0)
+    block = out_ref.shape[0]
+    scale = scale_ref[0, 0]
+
+    def body(j, _):
+        row = idx_ref[i * block + j]
+        out_ref[j, :] = delta_ref[row, :] * scale
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def randk_gather(delta_rows: jnp.ndarray, idx_rows: jnp.ndarray,
+                 scale: jnp.ndarray, *, block: int = 256,
+                 interpret: bool = True) -> jnp.ndarray:
+    """delta_rows: (R, 128); idx_rows: (k_rows,) int32 row indices;
+    scale: scalar. Returns (k_rows, 128)."""
+    k_rows = idx_rows.shape[0]
+    if k_rows % block != 0:
+        block = k_rows
+    grid = (k_rows // block,)
+    scale2d = jnp.asarray(scale, delta_rows.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+            out_specs=pl.BlockSpec((block, LANES), lambda i, *_: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((k_rows, LANES), delta_rows.dtype),
+        interpret=interpret,
+    )(idx_rows, scale2d, delta_rows)

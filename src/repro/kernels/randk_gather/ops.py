@@ -1,0 +1,38 @@
+"""jit wrapper: full-vector rand_k gather+scale through the Pallas kernel.
+
+The flat update Delta (d,) is viewed as (d/128, 128) lane-aligned rows and
+omega indexes rows (DESIGN.md: rand_k over 128-coordinate rows is the
+TPU-native mapping — gathers stay lane-aligned). ``interpret=True`` runs the
+kernel body on CPU; on TPU pass interpret=False.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.randk_gather.kernel import LANES, randk_gather
+from repro.kernels.randk_gather.ref import randk_gather_ref
+
+
+def gather_rows(delta_flat: jnp.ndarray, idx_rows: jnp.ndarray, scale,
+                *, interpret: bool = True, use_kernel: bool = True):
+    """delta_flat: (d,) with d % 128 == 0; idx_rows: (k_rows,) int32.
+    Returns the scaled gathered payload (k_rows * 128,)."""
+    d = delta_flat.shape[0]
+    assert d % LANES == 0, d
+    rows = delta_flat.reshape(d // LANES, LANES)
+    if use_kernel:
+        out = randk_gather(rows, idx_rows, jnp.asarray(scale,
+                                                       delta_flat.dtype),
+                           interpret=interpret)
+    else:
+        out = randk_gather_ref(rows, idx_rows,
+                               jnp.asarray(scale, delta_flat.dtype))
+    return out.reshape(-1)
+
+
+def row_indices_from_coords(key, d: int, k: int):
+    """Sample rand_k over lane-aligned rows: k/128 of the d/128 rows."""
+    rows = d // LANES
+    k_rows = max(k // LANES, 1)
+    return jax.random.permutation(key, rows)[:k_rows]

@@ -1,0 +1,10 @@
+"""Oracle: x_i = beta/|h_i| * A^t Delta — gather k coordinates + scale."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def randk_gather_ref(delta: jnp.ndarray, idx: jnp.ndarray,
+                     scale: jnp.ndarray | float) -> jnp.ndarray:
+    """delta: (d,); idx: (k,) int32; scale: scalar. Returns (k,)."""
+    return jnp.take(delta, idx, axis=0) * scale

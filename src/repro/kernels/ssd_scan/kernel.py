@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunk scan.
+
+Grid = (B, H, n_chunks) with the chunk dim innermost: TPU grids execute
+sequentially, so the inter-chunk state recurrence is carried in a VMEM
+scratch (P, N) across chunk steps and re-zeroed when (b, h) changes.
+
+Per chunk (all in VMEM, MXU-aligned chunk=128):
+  la     = dt * A[h]                       (chunk,)
+  cum    = cumsum(la)
+  L      = exp(cum_i - cum_j) masked i>=j  (chunk, chunk)
+  y      = ((C B^T) * L) @ (x*dt)          intra-chunk
+  y     += exp(cum)[:, None] * (C @ state) carried-in states
+  state  = exp(cum_last) * state + (B * exp(cum_last - cum))^T @ (x*dt)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_out_ref,
+            state_ref):
+    h = pl.program_id(1)
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (chunk, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (chunk,)
+    bm = b_ref[0].astype(jnp.float32)                  # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)                  # (chunk, N)
+    a = a_ref[h]                                       # scalar (prefetch)
+
+    chunk = x.shape[0]
+    la = dt * a                                        # (chunk,)
+    cum = jnp.cumsum(la)                               # (chunk,)
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where(ii >= jj, seg, -jnp.inf))
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)
+    xdt = x * dt[:, None]                              # (chunk, P)
+    y = jnp.dot(cb * decay, xdt, preferred_element_type=jnp.float32)
+
+    # carried-in contribution from previous chunks
+    state = state_ref[...]                             # (P, N)
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        cm, state.T, preferred_element_type=jnp.float32)
+
+    # state update
+    dec_last = jnp.exp(cum[-1] - cum)                  # (chunk,)
+    new_state = (jnp.exp(cum[-1]) * state
+                 + jnp.dot(xdt.T, bm * dec_last[:, None],
+                           preferred_element_type=jnp.float32))
+    state_ref[...] = new_state
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = new_state.astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); a: (H,) f32; b, c: (B,S,N).
+    Returns (y (B,S,H,P) f32, final state (B,H,P,N) f32)."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    grid = (bsz, h, nc)
+    y, state = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci, *_:
+                             (bi, ci, hi, 0)),
+                pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci, *_:
+                             (bi, ci, hi)),
+                pl.BlockSpec((1, chunk, n), lambda bi, hi, ci, *_:
+                             (bi, ci, 0)),
+                pl.BlockSpec((1, chunk, n), lambda bi, hi, ci, *_:
+                             (bi, ci, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci, *_:
+                             (bi, ci, hi, 0)),
+                pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci, *_:
+                             (bi, hi, 0, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a.astype(jnp.float32), x, dt, b, c)
+    return y, state

@@ -1,0 +1,16 @@
+"""jit wrapper for the SSD chunk-scan kernel (used by models.mamba2 when
+use_kernel=True; interpret=True on CPU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan as ssd_scan_kernel
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def ssd_scan(x, dt, a, b, c, *, chunk: int = 128, interpret: bool = True,
+             use_kernel: bool = True):
+    if use_kernel:
+        return ssd_scan_kernel(x, dt, a, b, c, chunk=chunk,
+                               interpret=interpret)
+    return ssd_scan_ref(x, dt, a, b, c, chunk)

@@ -1,0 +1,3 @@
+"""Oracle for the SSD chunk scan — re-exports the model's chunked math
+(repro.models.mamba2.ssd_chunked is the single source of truth)."""
+from repro.models.mamba2 import ssd_chunked as ssd_scan_ref  # noqa: F401

@@ -1,0 +1,272 @@
+"""HLO cost model with while-loop trip-count multipliers.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each while-loop body ONCE,
+which undercounts scanned layer stacks and flash-attention KV loops by the
+trip count. This module parses the compiled (post-SPMD-partitioning) HLO text
+and walks the call graph from ENTRY, multiplying each computation's costs by
+the product of enclosing loop trip counts (parsed from each loop condition's
+comparison constant).
+
+Costs per op:
+  flops:  dot = 2 * |result| * prod(contracting dims); convolution =
+          2 * |result| * prod(kernel spatial) * C_in/groups; elementwise
+          arithmetic = |result| (1 flop/elem; transcendentals counted 1).
+          Counted recursively inside fusions.
+  bytes:  |result| + sum |operands| for top-level (scheduled) ops; fusions
+          count their interface only (operands + result), not their interior
+          — the fusion-aware HBM-traffic proxy.
+  collective bytes: ring model per kind (see hlo_analysis), multiplied by
+          the enclosing trip counts.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u1": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_S32_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "logistic", "cosine", "sine", "floor", "ceil", "round-nearest-afz",
+    "remainder", "atan2", "expm1", "log1p", "cbrt", "erf",
+}
+_NO_BYTES = {"tuple", "get-tuple-element", "parameter", "constant",
+             "bitcast", "while", "conditional", "after-all", "partition-id",
+             "replica-id"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-reduce-start", "all-gather-start",
+                "collective-permute-start"}
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    elems_total, bytes_total = 0, 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems_total += n
+        bytes_total += n * _DTYPE_BYTES.get(dt, 4)
+    return elems_total, bytes_total
+
+
+class Op:
+    __slots__ = ("name", "shape", "kind", "rest", "operands")
+
+    def __init__(self, name, shape, kind, rest):
+        self.name, self.shape, self.kind, self.rest = name, shape, kind, rest
+        self.operands: List[str] = []
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[Op]]:
+    comps: Dict[str, List[Op]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        h = _COMP_HDR_RE.match(line)
+        if h:
+            cur = h.group(1)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+        # operands: %names inside the first (...) — up to the closing paren
+        depth, end = 0, len(m.group(4))
+        for i, ch in enumerate(m.group(4)):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    end = i
+                    break
+                depth -= 1
+        op.operands = _OPERAND_RE.findall(m.group(4)[:end])
+        comps[cur].append(op)
+    return comps
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    best = 1
+    for op in comps.get(cond_name, []):
+        for c in _CONST_S32_RE.finditer(op.rest if op.kind == "constant"
+                                        else ""):
+            pass
+    # constants appear as their own ops: `%c = s32[] constant(N)`
+    for op in comps.get(cond_name, []):
+        if op.kind == "constant" and op.shape.startswith("s32[]"):
+            m = re.match(r"(\d+)\)", op.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return max(best, 1)
+
+
+def _dot_flops(op: Op, shapes: Dict[str, str]) -> float:
+    _, _ = 0, 0
+    res_elems, _ = _shape_elems_bytes(op.shape)
+    lhs = shapes.get(op.operands[0]) if op.operands else None
+    contract = 1
+    cm = _CONTRACT_RE.search(op.rest)
+    if lhs and cm and cm.group(1):
+        dims = [int(x) for x in cm.group(1).split(",")]
+        lm = _SHAPE_RE.search(lhs)
+        if lm:
+            lshape = ([int(x) for x in lm.group(2).split(",")]
+                      if lm.group(2) else [])
+            for d in dims:
+                if d < len(lshape):
+                    contract *= lshape[d]
+    return 2.0 * res_elems * contract
+
+
+def _conv_flops(op: Op, shapes: Dict[str, str]) -> float:
+    res_elems, _ = _shape_elems_bytes(op.shape)
+    wm = _WINDOW_RE.search(op.rest)
+    spatial = 1
+    if wm:
+        for s in wm.group(1).split("x"):
+            spatial *= int(s)
+    cin = 1
+    if len(op.operands) > 1:
+        k = shapes.get(op.operands[1])
+        if k:
+            km = _SHAPE_RE.search(k)
+            if km and km.group(2):
+                kd = [int(x) for x in km.group(2).split(",")]
+                # OIHW kernel: dims beyond O are I + spatial; I = prod/spatial/O
+                if len(kd) >= 2:
+                    cin = kd[1]
+    return 2.0 * res_elems * spatial * cin
+
+
+def _collective_moved(op: Op) -> float:
+    _, res_bytes = _shape_elems_bytes(op.shape)
+    g = 1
+    gm = _GROUPS_RE.search(op.rest)
+    if gm:
+        g = len(gm.group(1).split(","))
+    else:
+        gi = _GROUPS_IOTA_RE.search(op.rest)
+        if gi:
+            g = int(gi.group(2))
+    frac = (g - 1) / g if g > 1 else 0.0
+    kind = op.kind.replace("-start", "")
+    if kind == "all-reduce":
+        return 2.0 * frac * res_bytes
+    if kind == "all-gather":
+        return frac * res_bytes
+    if kind == "reduce-scatter":
+        return frac * res_bytes * g
+    if kind == "all-to-all":
+        return frac * res_bytes
+    return float(res_bytes)  # collective-permute
+
+
+def analyze_hlo(hlo: str) -> Dict[str, float]:
+    comps = _parse_computations(hlo)
+    # entry = computation named in `ENTRY` line; _COMP_HDR_RE loses the ENTRY
+    # marker, so detect it via the raw text.
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    shapes_per_comp = {
+        c: {op.name: op.shape for op in ops} for c, ops in comps.items()
+    }
+
+    totals = defaultdict(float)
+    visited_stack = set()
+
+    def visit(comp: str, mult: float, top_level: bool):
+        if comp not in comps or (comp, mult) in visited_stack:
+            pass
+        shapes = shapes_per_comp.get(comp, {})
+        for op in comps.get(comp, []):
+            k = op.kind
+            if k == "while":
+                body = _BODY_RE.search(op.rest)
+                cond = _COND_RE.search(op.rest)
+                trips = _trip_count(comps, cond.group(1)) if cond else 1
+                if body:
+                    visit(body.group(1), mult * trips, True)
+                if cond:
+                    visit(cond.group(1), mult * trips, True)
+                continue
+            if k == "conditional":
+                br = _BRANCHES_RE.search(op.rest)
+                if br:
+                    for b in _OPERAND_RE.findall(br.group(1)):
+                        visit(b, mult, True)
+                continue
+            if k in ("fusion", "call", "async-start"):
+                cm = _CALLS_RE.search(op.rest)
+                if cm:
+                    visit(cm.group(1), mult, False)
+                # fusion interface bytes
+                if top_level:
+                    _, rb = _shape_elems_bytes(op.shape)
+                    ob = sum(_shape_elems_bytes(shapes.get(o, ""))[1]
+                             for o in op.operands)
+                    totals["bytes"] += mult * (rb + ob)
+                continue
+            if k in _COLLECTIVES:
+                totals["coll"] += mult * _collective_moved(op)
+                totals[f"coll_{k.replace('-start','')}"] += \
+                    mult * _collective_moved(op)
+                _, rb = _shape_elems_bytes(op.shape)
+                totals["bytes"] += mult * 2 * rb
+                continue
+            # flops
+            if k == "dot":
+                totals["flops"] += mult * _dot_flops(op, shapes)
+            elif k == "convolution":
+                totals["flops"] += mult * _conv_flops(op, shapes)
+            elif k in _ELEMWISE or k in ("reduce", "compare", "select",
+                                         "clamp"):
+                e, _ = _shape_elems_bytes(op.shape)
+                totals["flops"] += mult * e
+            # bytes (top-level scheduled ops only)
+            if top_level and k not in _NO_BYTES:
+                _, rb = _shape_elems_bytes(op.shape)
+                ob = sum(_shape_elems_bytes(shapes.get(o, ""))[1]
+                         for o in op.operands)
+                totals["bytes"] += mult * (rb + ob)
+
+    visit(entry, 1.0, True)
+    return dict(totals)

@@ -1,0 +1,100 @@
+"""ShapeDtypeStruct input specs per (architecture x input shape) — the
+shape-only stand-ins used by the multi-pod dry-run (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import transformer as T
+from repro.models.attention import kv_cache_spec
+
+
+def _sds(shape, dtype, mesh: Optional[Mesh], spec: Optional[Tuple] = None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    from repro.sharding.rules import resolve_spec
+    ps = resolve_spec(spec or (None,) * len(shape), shape, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, ps))
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      mesh: Optional[Mesh] = None) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch = {}
+    s_text = s - cfg.vision_prefix if cfg.family == "vlm" else s
+    batch["tokens"] = _sds((b, s_text), jnp.int32, mesh, ("batch", None))
+    batch["labels"] = _sds((b, s_text), jnp.int32, mesh, ("batch", None))
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = _sds((b, cfg.vision_prefix, cfg.d_model),
+                                      dt, mesh, ("batch", None, None))
+    if cfg.is_encoder_decoder:
+        batch["audio_embeds"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                                     dt, mesh, ("batch", None, None))
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape,
+                        mesh: Optional[Mesh] = None) -> Dict:
+    specs = train_batch_specs(cfg, shape, mesh)
+    specs.pop("labels")
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape,
+                 mesh: Optional[Mesh] = None,
+                 window: Optional[int] = None) -> Dict:
+    """Token + cache specs for serve_step: ONE new token, cache of seq_len
+    (ring-buffer of `window` slots for sliding-window/long-context mode)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    caches_shape = jax.eval_shape(
+        lambda: T.make_caches(cfg, b, s, window=window, dtype=dt))
+
+    from repro.sharding.rules import resolve_spec
+
+    def shard_cache_leaf(path, sd):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(sd.shape, sd.dtype)
+        name = str(getattr(path[-1], "key", ""))
+        if name in ("k", "v"):      # stacked (rep, B, S, Hkv, Dh)
+            ps = P(None, *kv_cache_spec(sd.shape[1:], mesh))
+        elif name in ("ssm", "conv"):  # stacked (rep, B, ...) state
+            ps = resolve_spec((None, "batch") + (None,) * (sd.ndim - 2),
+                              sd.shape, mesh)
+        else:                       # idx / slot_pos scalars
+            ps = resolve_spec((None,) * sd.ndim, sd.shape, mesh)
+        return jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                    sharding=NamedSharding(mesh, ps))
+
+    caches = jax.tree_util.tree_map_with_path(shard_cache_leaf, caches_shape)
+    out = {"token": _sds((b, 1), jnp.int32, mesh, ("batch", None)),
+           "caches": caches}
+    if cfg.is_encoder_decoder:
+        out["enc_out"] = _sds((b, cfg.encoder_seq, cfg.d_model), dt, mesh,
+                              ("batch", None, None))
+    return out
+
+
+def _batch_div(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def long_context_window(cfg: ModelConfig, shape: InputShape
+                        ) -> Optional[int]:
+    """Sliding-window policy for the long_500k shape (DESIGN.md §5)."""
+    if shape.name != "long_500k":
+        return None
+    if cfg.family == "ssm":
+        return None            # attention-free
+    return cfg.long_context_window

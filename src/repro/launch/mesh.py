@@ -1,0 +1,30 @@
+"""Production mesh factory. Importing this module never touches jax device
+state; call the functions."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """(16,16) 'data','model' single pod (256 chips, v5e) or
+    (2,16,16) 'pod','data','model' for 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    dev = np.array(devices[:n]).reshape(shape)
+    return Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
+    """Small mesh over however many (host) devices exist — smoke tests."""
+    n = int(np.prod(shape))
+    dev = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))

@@ -1,0 +1,241 @@
+"""Production step functions.
+
+``make_pfels_train_step``: PFELS as a distributed optimizer at pod scale
+(DESIGN.md §3) — each pod is one FL client. Multi-pod uses an EXPLICIT
+client dimension: every param carries a leading (n_pods,) dim sharded over
+`pod` (client model replicas), the forward/backward is vmapped with
+``spmd_axis_name="pod"`` so per-client gradients never cross pods, and the
+AirComp superposition is the sum over the client dim — GSPMD lowers it to
+the cross-pod all-reduce. This is pure auto-sharding (no manual regions).
+
+``make_prefill_step`` / ``make_serve_step``: plain forwards of the model
+stack (PFELS applies to training only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, PFELSConfig
+from repro.core import aggregation, channel, power_control, randk
+from repro.core.clipping import clip_by_global_norm
+from repro.models import transformer as T
+
+
+def _round_channel(key, pfels: PFELSConfig, d: int, n_clients: int):
+    """Per-round channel state + Theorem-5 beta (same on every client)."""
+    kg, kp = jax.random.split(key)
+    gains = channel.sample_gains(kg, n_clients, pfels.channel)
+    p_lims = channel.sample_power_limits(kp, n_clients, d, pfels.channel)
+    k_coords = max(int(round(pfels.compression_ratio * d)), 1)
+    beta = power_control.beta_pfels(
+        gains, p_lims, d=d, k=k_coords, c1=pfels.clip, eta=pfels.local_lr,
+        tau=max(pfels.local_steps, 1), epsilon=pfels.epsilon, r=n_clients,
+        n=max(pfels.num_clients, n_clients), delta=pfels.resolved_delta(),
+        sigma0=pfels.channel.noise_std)
+    return gains, beta
+
+
+def make_pfels_train_step(cfg: ModelConfig, pfels: PFELSConfig, d: int,
+                          mesh: Mesh, *, remat: bool = True):
+    """Returns step(params, batch, key) -> (params, metrics).
+
+    Multi-pod: params carry a leading client dim (see module docstring);
+    use `clientize_*` helpers to build inputs.
+    """
+    n_clients = mesh.shape.get("pod", 1)
+    sigma0 = pfels.channel.noise_std
+
+    def loss_fn(p, b):
+        return T.forward_train(p, cfg, b, remat=remat)
+
+    accum = max(pfels.grad_accum, 1)
+    tau = max(pfels.local_steps, 1)
+
+    def local_update(params, batch, *, metrics_only=False):
+        """Per-client local update Delta_i.
+
+        tau == 1: Delta = -eta * clip(grad)  (with grad_accum microbatching)
+        tau > 1:  Alg. 2 lines 6-10 at pod scale — tau clipped-SGD steps,
+        each on a 1/tau slice of the client's batch; Delta = theta_tau -
+        theta_0 (sensitivity eta*tau*C1 exactly as Lemma 2)."""
+        if tau == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+            g_clip, gnorm = clip_by_global_norm(grads, pfels.clip)
+            delta = jax.tree.map(lambda g: -pfels.local_lr
+                                 * g.astype(jnp.float32), g_clip)
+            return delta, loss, metrics, gnorm
+
+        b0 = jax.tree.leaves(batch)[0].shape[0]
+        if b0 % tau != 0:
+            raise ValueError(
+                f"PFELS local_steps={tau} must divide the per-client batch "
+                f"{b0} (each local step trains on one 1/tau slice)")
+        mb = jax.tree.map(
+            lambda x: x.reshape((tau, x.shape[0] // tau) + x.shape[1:]),
+            batch)
+
+        def body(p, b_s):
+            (loss, m), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b_s)
+            g, gnorm = clip_by_global_norm(g, pfels.clip)
+            p = jax.tree.map(
+                lambda p_, g_: (p_.astype(jnp.float32) - pfels.local_lr
+                                * g_.astype(jnp.float32)).astype(p_.dtype),
+                p, g)
+            return p, (loss, m, gnorm)
+
+        p_tau, (losses, ms, gnorms) = jax.lax.scan(body, params, mb)
+        delta = jax.tree.map(
+            lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+            p_tau, params)
+        metrics = jax.tree.map(jnp.mean, ms)
+        return delta, jnp.mean(losses), metrics, jnp.mean(gnorms)
+
+    def grads_of(params, batch):
+        """(loss, metrics), grads — with `accum` microbatches scanned to
+        bound activation memory (per-layer carry stacks shrink by accum)."""
+        if accum == 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        mb = jax.tree.map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+            batch)
+
+        def body(acc, b_i):
+            out = jax.value_and_grad(loss_fn, has_aux=True)(params, b_i)
+            acc = jax.tree.map(lambda a, x: a + x.astype(a.dtype), acc, out)
+            return acc, None
+
+        first = jax.tree.map(lambda x: x[0], mb)
+        rest = jax.tree.map(lambda x: x[1:], mb)
+        init = jax.value_and_grad(loss_fn, has_aux=True)(params, first)
+        acc, _ = jax.lax.scan(body, init, rest)
+        return jax.tree.map(lambda x: (x / accum).astype(x.dtype), acc)
+
+    if n_clients == 1:
+        def step(params, batch, key):
+            update, loss, metrics, gnorm = local_update(params, batch)
+            kc, km, kn = jax.random.split(key, 3)
+            gains, beta = _round_channel(kc, pfels, d, 1)
+            masks = randk.mask_tree(km, update, pfels.compression_ratio)
+            delta = aggregation.pfels_production_aggregate(
+                update, masks, beta=beta, r=1, sigma0=sigma0, noise_key=kn,
+                axis_name=None, unbiased_rescale=pfels.unbiased_rescale,
+                compression_p=pfels.compression_ratio)
+            new_params = jax.tree.map(
+                lambda p_, u: (p_.astype(jnp.float32)
+                               + u.astype(jnp.float32)).astype(p_.dtype),
+                params, delta)
+            masked = randk.apply_mask_tree(update, masks)
+            sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                     for x in jax.tree.leaves(masked))
+            energy = (beta / gains[0]) ** 2 * sq
+            return new_params, dict(metrics, loss=loss, beta=beta,
+                                    grad_norm=gnorm, energy=energy)
+        return step
+
+    # ---------------- multi-pod: explicit client dim -------------------
+    def step(params_c, batch, key):
+        b_global = jax.tree.leaves(batch)[0].shape[0]
+        b_local = b_global // n_clients
+        batch_c = jax.tree.map(
+            lambda x: x.reshape((n_clients, b_local) + x.shape[1:]), batch)
+
+        from repro.sharding.rules import exclude_axes
+
+        def client_fn(p, b):
+            with exclude_axes("pod"):
+                return local_update(p, b)
+
+        updates_c, losses, metrics, gnorms = jax.vmap(
+            client_fn, spmd_axis_name="pod")(params_c, batch_c)
+
+        kc, km, kn = jax.random.split(key, 3)
+        gains, beta = _round_channel(kc, pfels, d, n_clients)
+
+        # shared A^t: one mask tree, broadcast over the client dim
+        template = jax.tree.map(lambda x: x[0], updates_c)
+        masks = randk.mask_tree(km, template, pfels.compression_ratio)
+        masked_c = jax.tree.map(
+            lambda u, m: u * m.astype(u.dtype)[None], updates_c, masks)
+
+        # AirComp: sum over the client dim == cross-pod all-reduce;
+        # channel gains are pre-inverted so the superposed signal is
+        # beta * sum_i A Delta_i, then intrinsic noise is added.
+        leaves, treedef = jax.tree.flatten(
+            jax.tree.map(lambda u: jnp.sum(u * beta, axis=0), masked_c))
+        mask_leaves = jax.tree.leaves(masks)
+        keys = jax.random.split(kn, len(leaves))
+        noisy = [x + sigma0 * m.astype(x.dtype)
+                 * jax.random.normal(k, x.shape, jnp.float32).astype(x.dtype)
+                 for x, m, k in zip(leaves, mask_leaves, keys)]
+        scale = 1.0 / (n_clients * beta)
+        if pfels.unbiased_rescale:
+            scale = scale / pfels.compression_ratio
+        delta = jax.tree.map(lambda x: x * scale,
+                             jax.tree.unflatten(treedef, noisy))
+
+        new_params = jax.tree.map(
+            lambda p_, u: (p_.astype(jnp.float32)
+                           + u.astype(jnp.float32)[None]).astype(p_.dtype),
+            params_c, delta)
+
+        sq_c = jax.vmap(lambda u: sum(
+            jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(u)))(masked_c)
+        energy = jnp.sum((beta / gains[:n_clients]) ** 2 * sq_c)
+        metrics = jax.tree.map(jnp.mean, metrics)
+        return new_params, dict(metrics, loss=jnp.mean(losses), beta=beta,
+                                grad_norm=jnp.mean(gnorms), energy=energy)
+
+    return step
+
+
+def clientize_shapes(shapes, n_clients: int):
+    """Add the leading client dim to a param shape tree."""
+    return jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct((n_clients,) + sd.shape, sd.dtype),
+        shapes)
+
+
+def clientize_logical(logical, n_clients: int):
+    """Prefix every logical spec with the 'clients' (pod) axis."""
+    return jax.tree.map(
+        lambda lg: ("clients",) + tuple(lg), logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def clientize_params(params, n_clients: int):
+    """Replicate real params along a new client dim (simulation start)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape), params)
+
+
+def make_train_loss_step(cfg: ModelConfig, *, remat: bool = True):
+    """Plain (non-FL) train step: loss + grads, for utilities/benchmarks."""
+    def step(params, batch):
+        (loss, m), g = jax.value_and_grad(
+            lambda p: T.forward_train(p, cfg, batch, remat=remat),
+            has_aux=True)(params)
+        return loss, m, g
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig, window: Optional[int] = None):
+    def step(params, batch):
+        logits, caches, enc_out = T.prefill(params, cfg, batch,
+                                            window=window)
+        return logits, caches
+    return step
+
+
+def make_serve_step(cfg: ModelConfig, window: Optional[int] = None):
+    """ONE new token given a KV cache (decode shapes)."""
+    def step(params, token, caches, enc_out=None):
+        return T.decode_step(params, cfg, token, caches, window=window,
+                             enc_out=enc_out)
+    return step

@@ -1,0 +1,133 @@
+"""The paper's own model families: modified VGG-11 (CIFAR-10) and modified
+ResNet-18 (FEMNIST), plus an MLP for fast benchmark sweeps. Pure JAX
+(lax.conv); width_mult scales channel counts for CPU-scale runs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig
+
+
+def _conv_init(key, cin, cout, ksize):
+    fan_in = cin * ksize * ksize
+    w = jax.random.normal(key, (cout, cin, ksize, ksize), jnp.float32)
+    return w * math.sqrt(2.0 / fan_in)
+
+
+def _conv(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 1, 2, 2), (1, 1, 2, 2), "VALID")
+
+
+VGG11_PLAN = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+
+
+def init_cnn(key, cfg: CNNConfig):
+    ks = iter(jax.random.split(key, 64))
+    wm = cfg.width_mult
+    params = {}
+    if cfg.arch == "mlp":
+        d_in = cfg.in_channels * cfg.image_size ** 2
+        h = max(int(128 * wm), 16)
+        params["fc1"] = {"w": jax.random.normal(next(ks), (d_in, h)) *
+                         math.sqrt(2 / d_in), "b": jnp.zeros((h,))}
+        params["fc2"] = {"w": jax.random.normal(next(ks), (h, h)) *
+                         math.sqrt(2 / h), "b": jnp.zeros((h,))}
+        params["out"] = {"w": jax.random.normal(next(ks),
+                                                (h, cfg.num_classes)) *
+                         math.sqrt(1 / h), "b": jnp.zeros((cfg.num_classes,))}
+        return params
+    if cfg.arch == "vgg":
+        cin = cfg.in_channels
+        convs = []
+        size = cfg.image_size
+        for item in VGG11_PLAN:
+            if item == "M":
+                if size > 1:
+                    size //= 2
+                continue
+            cout = max(int(item * wm), 8)
+            convs.append(_conv_init(next(ks), cin, cout, 3))
+            cin = cout
+        params["convs"] = convs
+        feat = cin * size * size
+        params["out"] = {"w": jax.random.normal(next(ks),
+                                                (feat, cfg.num_classes)) *
+                         math.sqrt(1 / feat),
+                         "b": jnp.zeros((cfg.num_classes,))}
+        return params
+    # resnet-18-ish: stem + 4 stages of 2 basic blocks
+    widths = [max(int(c * wm), 8) for c in (64, 128, 256, 512)]
+    cin = cfg.in_channels
+    params["stem"] = _conv_init(next(ks), cin, widths[0], 3)
+    cin = widths[0]
+    stages = []
+    for si, cout in enumerate(widths):
+        blocks = []
+        for bi in range(2):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            blk = {"c1": _conv_init(next(ks), cin, cout, 3),
+                   "c2": _conv_init(next(ks), cout, cout, 3)}
+            if stride != 1 or cin != cout:
+                blk["proj"] = _conv_init(next(ks), cin, cout, 1)
+            blocks.append(blk)
+            cin = cout
+        stages.append(blocks)
+    params["stages"] = stages
+    params["out"] = {"w": jax.random.normal(next(ks),
+                                            (cin, cfg.num_classes)) *
+                     math.sqrt(1 / cin), "b": jnp.zeros((cfg.num_classes,))}
+    return params
+
+
+def apply_cnn(params, cfg: CNNConfig, images):
+    """images: (B, C, H, W) -> logits (B, num_classes)."""
+    x = images
+    if cfg.arch == "mlp":
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+        return x @ params["out"]["w"] + params["out"]["b"]
+    if cfg.arch == "vgg":
+        ci = 0
+        size = cfg.image_size
+        for item in VGG11_PLAN:
+            if item == "M":
+                if size > 1:
+                    x = _pool(x)
+                    size //= 2
+            else:
+                x = jax.nn.relu(_conv(x, params["convs"][ci]))
+                ci += 1
+        x = x.reshape(x.shape[0], -1)
+        return x @ params["out"]["w"] + params["out"]["b"]
+    x = jax.nn.relu(_conv(x, params["stem"]))
+    for si, stage in enumerate(params["stages"]):
+        for bi, blk in enumerate(stage):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = jax.nn.relu(_conv(x, blk["c1"], stride=stride))
+            h = _conv(h, blk["c2"])
+            sc = _conv(x, blk["proj"], stride=stride) if "proj" in blk else x
+            x = jax.nn.relu(h + sc)
+    x = jnp.mean(x, axis=(2, 3))
+    return x @ params["out"]["w"] + params["out"]["b"]
+
+
+def cnn_loss(params, cfg: CNNConfig, batch):
+    logits = apply_cnn(params, cfg, batch["x"])
+    labels = batch["y"]
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), {"accuracy": acc}

@@ -1,0 +1,264 @@
+"""Shared model layers: norms, RoPE / M-RoPE, MLPs, initializers.
+
+All functions are pure; params are plain dict pytrees. Each init function
+returns ``(params, logical)`` where ``logical`` mirrors params with tuples of
+logical axis names (resolved by repro.sharding.rules).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constraint
+
+
+# ---------------------------------------------------------------- initializers
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool, dtype,
+               logical=("fsdp", "tensor")):
+    kw, kb = jax.random.split(key)
+    p = {"w": _normal(kw, (d_in, d_out), 1.0 / math.sqrt(d_in), dtype)}
+    lg = {"w": logical}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        lg["b"] = (logical[1],)
+    return p, lg
+
+
+def dense_apply(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ----------------------------------------------------------------------- norms
+
+def norm_init(d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}, {"scale": (None,)}
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": (None,), "bias": (None,)})
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-6, impl: str = "f32"):
+    if impl == "stats_f32":
+        # statistics in f32, scaling in the input dtype: the activation
+        # cotangent stays bf16 (halves the backward all-reduce bytes)
+        xf = x.astype(jnp.float32)
+        if kind == "rmsnorm":
+            ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+            r = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+            y = x * r * p["scale"].astype(x.dtype)
+        else:
+            mu = jnp.mean(xf, axis=-1, keepdims=True)
+            var = jnp.var(xf, axis=-1, keepdims=True)
+            r = jax.lax.rsqrt(var + eps).astype(x.dtype)
+            y = (x - mu.astype(x.dtype)) * r * p["scale"].astype(x.dtype)
+        if "bias" in p:
+            y = y + p["bias"].astype(x.dtype)
+        return y
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) int32. Standard 1-D RoPE."""
+    if theta <= 0:
+        return x
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,dh/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float
+                ) -> jnp.ndarray:
+    """M-RoPE (Qwen2-VL): positions3 (B, S, 3) = (t, h, w) ids; the rotary
+    spectrum is split into 3 sections, one per position stream."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = rope_freqs(dh, theta)                       # (half,)
+    # section sizes ~ (2/8, 3/8, 3/8) of the spectrum, Qwen2-VL style
+    s_t = half // 4
+    s_h = (half - s_t) // 2
+    s_w = half - s_t - s_h
+    sect = jnp.concatenate([jnp.zeros((s_t,), jnp.int32),
+                            jnp.ones((s_h,), jnp.int32),
+                            2 * jnp.ones((s_w,), jnp.int32)])
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),                 # (B,S,3)
+        jnp.broadcast_to(sect[None, None, :],
+                         positions3.shape[:2] + (half,)),
+        axis=-1)                                        # (B,S,half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ MLPs
+
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        p = {"wi": _normal(ks[0], (d_model, d_ff), 1 / math.sqrt(d_model), dtype),
+             "wg": _normal(ks[1], (d_model, d_ff), 1 / math.sqrt(d_model), dtype),
+             "wo": _normal(ks[2], (d_ff, d_model), 1 / math.sqrt(d_ff), dtype)}
+        lg = {"wi": ("fsdp", "tensor"), "wg": ("fsdp", "tensor"),
+              "wo": ("tensor", "fsdp")}
+    else:
+        p = {"wi": _normal(ks[0], (d_model, d_ff), 1 / math.sqrt(d_model), dtype),
+             "wo": _normal(ks[2], (d_ff, d_model), 1 / math.sqrt(d_ff), dtype)}
+        lg = {"wi": ("fsdp", "tensor"), "wo": ("tensor", "fsdp")}
+    return p, lg
+
+
+def mlp_apply(p, x, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * (x @ p["wi"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype))
+    h = constraint(h, "batch", None, "tensor")
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ----------------------------------------------------------- embedding / head
+
+def embed_init(key, vocab_padded: int, d_model: int, dtype):
+    p = {"table": _normal(key, (vocab_padded, d_model), 1.0, dtype)}
+    return p, {"table": ("tensor", "fsdp")}
+
+
+@jax.custom_vjp
+def _embed_lookup(table, tokens):
+    return jnp.take(table, tokens, axis=0)
+
+
+def _embed_lookup_fwd(table, tokens):
+    return jnp.take(table, tokens, axis=0), (tokens, table)
+
+
+def _embed_lookup_bwd(res, ct):
+    """Embedding gradient via a scatter-add whose operand is sharded ONLY
+    over the d_model (window) dim — GSPMD partitions window dims of scatters
+    without index masking, avoiding a replicated (V, d) f32 buffer; the
+    result is then resharded to the param sharding by the consumer."""
+    tokens, table = res
+    shape, dtype = table.shape, table.dtype
+    d = shape[1]
+    g = jnp.zeros(shape, jnp.float32)
+    g = constraint(g, None, "seq_all")      # d over (data, model)
+    g = g.at[tokens.reshape(-1)].add(
+        ct.reshape(-1, d).astype(jnp.float32))
+    g = constraint(g, None, "seq_all")
+    return g.astype(dtype), None
+
+
+_embed_lookup.defvjp(_embed_lookup_fwd, _embed_lookup_bwd)
+
+
+def embed_apply(p, tokens):
+    return _embed_lookup(p["table"], tokens)
+
+
+def logits_apply(p_head_or_embed, x, *, tied: bool):
+    t = p_head_or_embed["table"] if tied else p_head_or_embed["w"]
+    if tied:
+        y = x @ t.astype(x.dtype).T
+    else:
+        y = x @ t.astype(x.dtype)
+    return constraint(y, "batch", None, "tensor")
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+def chunked_cross_entropy(x, head, labels, vocab: int, *, tied: bool,
+                          chunk: int = 512):
+    """Cross-entropy without materialising the full (B, S, V) logits: scan
+    over sequence chunks, computing logits + NLL per chunk (the backward
+    recomputes each chunk's logits — checkpointed). Used when S*V is large
+    (e.g. command-r's 256k vocab)."""
+    b, s, d = x.shape
+    if s % chunk != 0:
+        chunk = s
+    nc = s // chunk
+    xs = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, xs_c):
+        nll_sum, n_valid = carry
+        x_c, l_c = xs_c
+        logits = logits_apply(head, x_c, tied=tied)
+        nll, nv = _ce_sums(logits, l_c, vocab)
+        return (nll_sum + nll, n_valid + nv), None
+
+    (nll_sum, n_valid), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xs, ls))
+    return nll_sum / jnp.maximum(n_valid, 1)
+
+
+def _ce_sums(logits, labels, vocab: int):
+    vpad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vpad > vocab:
+        neg = jnp.full((vpad - vocab,), -1e9, jnp.float32)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((vocab,), jnp.float32), neg])
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll), jnp.sum(valid).astype(jnp.float32)
+
+
+def cross_entropy(logits, labels, vocab: int):
+    """Mean token cross-entropy; padded vocab columns are excluded by masking
+    against the true vocab size. labels == -100 are ignored."""
+    vpad = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vpad > vocab:
+        neg = jnp.full((vpad - vocab,), -1e9, jnp.float32)
+        logits = logits + jnp.concatenate(
+            [jnp.zeros((vocab,), jnp.float32), neg])
+    valid = labels >= 0
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)

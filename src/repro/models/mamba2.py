@@ -1,0 +1,214 @@
+"""Mamba2 / SSD (state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked SSD algorithm: intra-chunk quadratic
+(attention-like) term + inter-chunk state recurrence via lax.scan over
+chunks. Decode is the O(1) recurrent update. The chunk computation itself is
+the perf hot-spot and has a Pallas kernel (repro.kernels.ssd_scan) whose
+oracle is the same math as here.
+
+Per head: h_t = a_t * h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t h_t
+with a_t = exp(dt_t * A) (A < 0 scalar per head), B_t, C_t in R^N,
+x_t in R^P.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.rules import constraint
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nheads = ssm.num_heads or d_inner // ssm.head_dim
+    return d_inner, nheads, ssm.head_dim, ssm.state_dim
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    d_inner, nh, p_dim, n = _dims(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    conv_dim = d_inner + 2 * n          # conv over x, B, C streams
+    params = {
+        # in_proj -> [z (d_inner), x (d_inner), B (n), C (n), dt (nh)]
+        "in_proj": layers._normal(ks[0], (d, 2 * d_inner + 2 * n + nh),
+                                  1 / math.sqrt(d), dtype),
+        "conv_w": layers._normal(ks[1], (ssm.conv_width, conv_dim),
+                                 1 / math.sqrt(ssm.conv_width), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": layers._normal(ks[2], (d_inner, d),
+                                   1 / math.sqrt(d_inner), dtype),
+    }
+    logical = {
+        "in_proj": ("fsdp", "tensor"), "conv_w": (None, "tensor"),
+        "conv_b": ("tensor",), "A_log": (None,), "D": (None,),
+        "dt_bias": (None,), "norm_scale": ("tensor",),
+        "out_proj": ("tensor", "fsdp"),
+    }
+    return params, logical
+
+
+def _split_proj(cfg, proj):
+    d_inner, nh, p_dim, n = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, width W. xbc: (B,S,C). If conv_state (B,W-1,C)
+    is given (decode), prepend it; returns (out, new_state)."""
+    w = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (w - 1,) + xbc.shape[2:], xbc.dtype)
+        xp = jnp.concatenate([pad, xbc], axis=1)
+    else:
+        xp = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+              for i in range(w))
+    out = jax.nn.silu(out + conv_b.astype(xbc.dtype))
+    new_state = xp[:, -(w - 1):] if w > 1 else None
+    return out, new_state
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD scan (pure jnp; oracle for the Pallas kernel).
+
+    x: (b, s, h, p) values; dt: (b, s, h) positive step sizes;
+    A: (h,) negative decay rates; B, C: (b, s, n) shared across heads
+    (Mamba2 uses one B/C group); returns y: (b, s, h, p), final state
+    (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    # log decay per step: la[t] = dt[t] * A  (A < 0)
+    la = dtc * A[None, None, None, :]            # (b,nc,chunk,h)
+    cum = jnp.cumsum(la, axis=2)                 # inclusive cumsum
+    # intra-chunk: y[i] += sum_{j<=i} exp(cum[i]-cum[j]) * (C_i.B_j) dt_j x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,i,j,h)
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)   # (b,nc,i,j)
+    w = cb[..., None] * decay                    # (b,nc,i,j,h)
+    xdt = xc * dtc[..., None]                    # (b,nc,chunk,h,p)
+    y = jnp.einsum("bcijh,bcjhp->bcihp", w, xdt)
+
+    # chunk-final states: S_c = sum_j exp(cum[last]-cum[j]) B_j (dt_j x_j)^T
+    dec_last = jnp.exp(cum[:, :, -1:, :] - cum)   # (b,nc,chunk,h)
+    state_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, dec_last, xdt)
+
+    # inter-chunk recurrence: H_c = exp(sum la_c) H_{c-1} + S_c
+    chunk_decay = jnp.exp(cum[:, :, -1, :])       # (b,nc,h)
+
+    def scan_body(hprev, xs):
+        s_c, d_c = xs
+        hnew = hprev * d_c[..., None, None] + s_c
+        return hnew, hprev
+
+    h0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, h, p, n), jnp.float32))
+    hfinal, hprevs = jax.lax.scan(
+        scan_body, h0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    hprevs = jnp.moveaxis(hprevs, 0, 1)           # (b,nc,h,p,n)
+
+    # carried-in contribution: y[i] += C_i · (exp(cum[i]) * H_{c-1})
+    y = y + jnp.einsum("bcin,bcih,bchpn->bcihp",
+                       Cc, jnp.exp(cum), hprevs)
+    return y.reshape(b, s, h, p), hfinal
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """One-step recurrence. x: (b,h,p); dt: (b,h); B,C: (b,n);
+    state: (b,h,p,n) -> (y (b,h,p), new state)."""
+    a = jnp.exp(dt.astype(jnp.float32) * A[None, :])          # (b,h)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    upd = jnp.einsum("bhp,bn->bhpn", xdt, B.astype(jnp.float32))
+    new_state = state * a[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(jnp.float32))
+    return y, new_state
+
+
+def _gated_out(params, cfg, y, z, x_resid_D, dt=None):
+    d_inner, nh, p_dim, n = _dims(cfg)
+    y = y + params["D"][None, None, :, None] * x_resid_D
+    y = y.reshape(y.shape[0], y.shape[1], d_inner)
+    y = y.astype(z.dtype) * jax.nn.silu(z)
+    y = layers.norm_apply({"scale": params["norm_scale"]}, y, "rmsnorm")
+    return y @ params["out_proj"].astype(y.dtype)
+
+
+def mamba_train(params, cfg: ModelConfig, x_in, use_kernel: bool = False):
+    """x_in: (B,S,D) -> (B,S,D); also returns final SSD+conv state (prefill)."""
+    d_inner, nh, p_dim, n = _dims(cfg)
+    proj = x_in @ params["in_proj"].astype(x_in.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    b, s = xs.shape[:2]
+    xh = xs.reshape(b, s, nh, p_dim)
+    xh = constraint(xh, "batch", None, "tensor", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    dt = jnp.clip(dt, cfg.ssm.dt_min, None)
+    A = -jnp.exp(params["A_log"])
+    chunk = min(cfg.ssm.chunk_size, s)
+    while chunk > 1 and s % chunk != 0:   # chunk must divide the seq len
+        chunk //= 2
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, state = ssd_ops.ssd_scan(xh, dt, A, B, C, chunk=chunk)
+    else:
+        y, state = ssd_chunked(xh, dt, A, B, C, chunk)
+    out = _gated_out(params, cfg, y.astype(x_in.dtype), z,
+                     xh.astype(jnp.float32))
+    return out, {"ssm": state.astype(jnp.float32),
+                 "conv": conv_state.astype(x_in.dtype)}
+
+
+def make_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_inner, nh, p_dim, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {"ssm": jnp.zeros((batch, nh, p_dim, n), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_dim),
+                              dtype)}
+
+
+def mamba_decode(params, cfg: ModelConfig, x_in, cache):
+    """x_in: (B,1,D); cache = {ssm (B,H,P,N), conv (B,W-1,C)}."""
+    d_inner, nh, p_dim, n = _dims(cfg)
+    proj = x_in @ params["in_proj"].astype(x_in.dtype)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                   conv_state=cache["conv"])
+    xs, B, C = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    b = xs.shape[0]
+    xh = xs.reshape(b, nh, p_dim)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + params["dt_bias"][None, :])
+    dt = jnp.clip(dt, cfg.ssm.dt_min, None)
+    A = -jnp.exp(params["A_log"])
+    y, new_ssm = ssd_decode_step(xh, dt, A, B[:, 0], C[:, 0], cache["ssm"])
+    out = _gated_out(params, cfg, y[:, None].astype(x_in.dtype), z,
+                     xh[:, None].astype(jnp.float32))
+    return out, {"ssm": new_ssm, "conv": conv_state}

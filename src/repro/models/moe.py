@@ -1,0 +1,269 @@
+"""Mixture-of-Experts MLP: top-k softmax router + per-dispatch-group
+sort-based capacity dispatch + grouped matmuls with the expert dim sharded
+over `model`.
+
+Dispatch is performed independently inside G "dispatch groups" (G = the
+`data` mesh axis size), so every sort/scatter/gather is local to a data
+shard and partitions trivially; the only cross-device movement is the
+(E, G, C, D) resharding boundary before the expert matmuls — the token
+all-to-all, inserted by GSPMD. This mirrors per-device dispatch in
+production MoE systems (no global sort, no replicated dispatch buffers).
+
+Experts are padded to a multiple of the `model` axis (config
+``padded_experts``); router logits for pad columns are -inf so routing
+never selects them.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.sharding.rules import constraint, get_abstract_mesh_or_none
+
+
+def moe_init(key, cfg: ModelConfig, experts_padded: int = None):
+    moe = cfg.moe
+    d, ff = cfg.d_model, moe.expert_ff
+    e = experts_padded or moe.experts_padded(1)
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": layers._normal(ks[0], (d, e), 1 / math.sqrt(d), jnp.float32),
+        "wi": layers._normal(ks[1], (e, d, ff), 1 / math.sqrt(d), dtype),
+        "wg": layers._normal(ks[2], (e, d, ff), 1 / math.sqrt(d), dtype),
+        "wo": layers._normal(ks[3], (e, ff, d), 1 / math.sqrt(ff), dtype),
+    }
+    lg = {"router": (None, "tensor"),
+          "wi": ("tensor", "fsdp", None), "wg": ("tensor", "fsdp", None),
+          "wo": ("tensor", None, "fsdp")}
+    return p, lg
+
+
+def _routing_plan(top_e, e: int, cap: int):
+    """Sort-based routing plan for one dispatch group.
+
+    The (expert, slot) <-> (token, k-slot) mapping is a PERMUTATION (each
+    slot holds at most one token), so dispatch, combine AND both backward
+    passes are pure gathers — never a scatter-add, which XLA upcasts to f32
+    (doubling all dispatch bytes; see §Perf).
+    """
+    tk = top_e.size
+    flat_e = top_e.reshape(-1)                             # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    ranks = jnp.argsort(order)                             # inverse perm
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos = ranks - starts[flat_e]                           # pos within expert
+    keep = pos < cap
+    pos_k = jnp.where(keep, pos, cap - 1)                  # clamped (masked)
+    slot_rank = starts[:, None] + jnp.arange(cap)[None, :]   # (E, cap)
+    slot_valid = jnp.arange(cap)[None, :] < jnp.minimum(counts, cap)[:, None]
+    tok_idx = jnp.take(order, jnp.clip(slot_rank, 0, tk - 1), axis=0)
+    return {"flat_e": flat_e, "pos_k": pos_k, "keep": keep,
+            "tok_idx": tok_idx, "slot_valid": slot_valid}
+
+
+@jax.custom_vjp
+def _dispatch_gather(xk, plan):
+    """(T*k, D) -> (E, cap, D) by gathering sorted token rows."""
+    buf = jnp.take(xk, plan["tok_idx"].reshape(-1), axis=0)
+    buf = buf.reshape(plan["tok_idx"].shape + xk.shape[-1:])
+    return buf * plan["slot_valid"][..., None].astype(buf.dtype)
+
+
+def _dg_fwd(xk, plan):
+    return _dispatch_gather(xk, plan), plan
+
+
+def _dg_bwd(plan, ct):
+    # ct: (E, cap, D) -> (T*k, D): inverse-permutation GATHER
+    e, cap, d = ct.shape
+    flat = ct.reshape(e * cap, d)
+    lin = plan["flat_e"] * cap + plan["pos_k"]
+    ct_xk = jnp.take(flat, lin, axis=0)
+    ct_xk = ct_xk * plan["keep"][:, None].astype(ct_xk.dtype)
+    return ct_xk, None
+
+
+_dispatch_gather.defvjp(_dg_fwd, _dg_bwd)
+
+
+@jax.custom_vjp
+def _combine_gather(out_buf, wflat, plan):
+    """(E, cap, D) -> (T*k, D) weighted by router probs."""
+    e, cap, d = out_buf.shape
+    lin = plan["flat_e"] * cap + plan["pos_k"]
+    g = jnp.take(out_buf.reshape(e * cap, d), lin, axis=0)
+    g = g * plan["keep"][:, None].astype(g.dtype)
+    return g * wflat[:, None].astype(g.dtype)
+
+
+def _cg_fwd(out_buf, wflat, plan):
+    return _combine_gather(out_buf, wflat, plan), (out_buf, wflat, plan)
+
+
+def _cg_bwd(res, ct):
+    out_buf, wflat, plan = res
+    e, cap, d = out_buf.shape
+    ctw = ct * wflat[:, None].astype(ct.dtype)             # (T*k, D)
+    # ct_out_buf[e,c] = ctw[tok_idx[e,c]] (permutation gather)
+    ct_buf = jnp.take(ctw, plan["tok_idx"].reshape(-1), axis=0)
+    ct_buf = ct_buf.reshape(e, cap, d) \
+        * plan["slot_valid"][..., None].astype(ct.dtype)
+    # ct_w[t] = <gathered[t], ct[t]>
+    lin = plan["flat_e"] * cap + plan["pos_k"]
+    g = jnp.take(out_buf.reshape(e * cap, d), lin, axis=0)
+    g = g * plan["keep"][:, None].astype(g.dtype)
+    ct_w = jnp.sum(g.astype(jnp.float32) * ct.astype(jnp.float32), axis=-1)
+    return ct_buf, ct_w.astype(wflat.dtype), None
+
+
+_combine_gather.defvjp(_cg_fwd, _cg_bwd)
+
+
+def _dispatch_one(xf, top_e, top_w, e: int, cap: int, k: int):
+    """Local (per dispatch group) capacity dispatch — pure gathers.
+
+    xf: (T, D); top_e/top_w: (T, k). Returns (buf (E, cap, D),
+    combine(out_buf (E, cap, D)) -> (T, D), drop_frac)."""
+    t, d = xf.shape
+    plan = _routing_plan(top_e, e, cap)
+    xk = jnp.repeat(xf, k, axis=0)                         # (T*k, D)
+    buf = _dispatch_gather(xk, plan)
+
+    def combine(out_buf):
+        wflat = top_w.reshape(-1)
+        yk = _combine_gather(out_buf, wflat, plan)
+        return yk.reshape(t, k, d).sum(axis=1)
+
+    return buf, combine, 1.0 - jnp.mean(plan["keep"].astype(jnp.float32))
+
+
+@jax.custom_vjp
+def _to_expert_layout(buf):
+    """(G, E, C, D) data-sharded -> (E, G, C, D) with BOTH dims sharded
+    (E over `model`, G over `data`).
+
+    g and c are batch dims of the expert einsum, so the MLP runs on
+    (E/model x G/data) tiles with zero communication; the only real token
+    movement is the small per-group all-gather at combine. Without the
+    2-D sharding GSPMD lowers this boundary as a full all-gather of the
+    expert dim (measured 2.7 GB/op on qwen3-moe, §Perf). The custom VJP
+    pins the backward to the mirrored path."""
+    buf = constraint(buf, "fsdp", "tensor", None, None)
+    return constraint(jnp.swapaxes(buf, 0, 1), "tensor", "fsdp", None, None)
+
+
+def _tel_fwd(buf):
+    return _to_expert_layout(buf), None
+
+
+def _tel_bwd(_, ct):
+    ct = constraint(ct, "tensor", "fsdp", None, None)
+    return (constraint(jnp.swapaxes(ct, 0, 1), "fsdp", "tensor", None,
+                       None),)
+
+
+_to_expert_layout.defvjp(_tel_fwd, _tel_bwd)
+
+
+@jax.custom_vjp
+def _from_expert_layout(buf):
+    """(E, G, C, D) 2-D sharded -> (G, E, C, D) data-sharded with E FULL per
+    group (the combine gather needs every expert's rows for its tokens) —
+    this all-gather over `model` is the true token return path."""
+    buf = jnp.swapaxes(buf, 0, 1)
+    buf = constraint(buf, "fsdp", "tensor", None, None)
+    return constraint(buf, "fsdp", None, None, None)
+
+
+def _fel_fwd(buf):
+    return _from_expert_layout(buf), None
+
+
+def _fel_bwd(_, ct):
+    ct = constraint(ct, "fsdp", "tensor", None, None)
+    return (constraint(jnp.swapaxes(ct, 0, 1), "tensor", "fsdp", None,
+                       None),)
+
+
+_from_expert_layout.defvjp(_fel_fwd, _fel_bwd)
+
+
+def moe_apply(p, cfg: ModelConfig, x):
+    """x: (B, S, D) -> (B, S, D), plus aux metrics dict."""
+    moe = cfg.moe
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    k = moe.top_k
+    t = b * s
+    mesh = get_abstract_mesh_or_none()
+    g = mesh.shape.get("data", 1) if mesh is not None else 1
+    if t % g != 0:
+        g = 1
+    tl = t // g
+    xf = x.reshape(g, tl, d)
+    xf = constraint(xf, "fsdp", None, None)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])        # (G, TL, E)
+    if e > moe.num_experts:                                # mask pads
+        pad_mask = jnp.arange(e) >= moe.num_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e9, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                 # (G, TL, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    top_w = top_w.astype(x.dtype)
+
+    cap = int(math.ceil(tl * k / moe.num_experts * moe.capacity_factor))
+    cap = max(cap, 4)
+
+    buf, combine, dropf = _vmapped_dispatch(xf, top_e, top_w, e, cap, k)
+
+    # (G, E, C, D) -> (E, G, C, D): expert-parallel boundary (all-to-all)
+    buf = _to_expert_layout(buf)
+
+    wi, wg, wo = (p["wi"].astype(x.dtype), p["wg"].astype(x.dtype),
+                  p["wo"].astype(x.dtype))
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", buf, wg)) \
+        * jnp.einsum("egcd,edf->egcf", buf, wi)
+    h = constraint(h, "tensor", "fsdp", None, None)
+    out_buf = jnp.einsum("egcf,efd->egcd", h, wo)
+    out_buf = constraint(out_buf, "tensor", "fsdp", None, None)
+    out_buf = _from_expert_layout(out_buf)                 # back to (G,E,C,D)
+
+    y = combine(out_buf).reshape(b, s, d)
+
+    # aux: load-balance loss (Switch-style) + drop fraction
+    me = jnp.mean(probs, axis=(0, 1))                      # (E,)
+    ce = jnp.mean(jax.nn.one_hot(top_e[..., 0], e,
+                                 dtype=jnp.float32), axis=(0, 1))
+    aux = {"load_balance_loss": e * jnp.sum(me * ce),
+           "drop_fraction": jnp.mean(dropf)}
+    return y, aux
+
+
+def _vmapped_dispatch(xf, top_e, top_w, e, cap, k):
+    """vmap of the gather dispatch over dispatch groups, returning a batched
+    combine closure."""
+    g, tl, d = xf.shape
+
+    def fwd(xi, ei):
+        plan = _routing_plan(ei, e, cap)
+        xk = jnp.repeat(xi, k, axis=0)
+        buf = _dispatch_gather(xk, plan)
+        return buf, plan, 1.0 - jnp.mean(plan["keep"].astype(jnp.float32))
+
+    buf, plans, dropf = jax.vmap(fwd)(xf, top_e)
+
+    def combine(out_buf):  # out_buf: (G, E, C, D)
+        def one(ob, wi_, plan):
+            yk = _combine_gather(ob, wi_.reshape(-1), plan)
+            return yk.reshape(tl, k, d).sum(axis=1)
+
+        return jax.vmap(one)(out_buf, top_w, plans)
+
+    return buf, combine, dropf

@@ -1,0 +1,33 @@
+"""Adam (for the server-side adaptive-FL beyond-paper option and the LLM
+finetune example)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_init(params):
+    z = lambda x: jnp.zeros_like(x, dtype=jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    tf = t.astype(jnp.float32)
+    mhat_s = 1.0 / (1 - b1 ** tf)
+    vhat_s = 1.0 / (1 - b2 ** tf)
+
+    def upd(p, m, v):
+        step = lr * (m * mhat_s) / (jnp.sqrt(v * vhat_s) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    return (jax.tree.map(upd, params, m, v),
+            {"m": m, "v": v, "t": t})

@@ -1,0 +1,20 @@
+"""SGD with momentum (paper §8.1: momentum 0.9)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32),
+                        params)
+
+
+def sgd_update(params, grads, state, *, lr, momentum: float = 0.0):
+    """Returns (new_params, new_state)."""
+    new_v = jax.tree.map(
+        lambda v, g: momentum * v + g.astype(jnp.float32), state, grads)
+    new_p = jax.tree.map(
+        lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+        params, new_v)
+    return new_p, new_v

@@ -1,0 +1,4 @@
+from repro.sharding.rules import (constraint, named_sharding, resolve_spec,
+                                  tree_shardings)
+
+__all__ = ["constraint", "named_sharding", "resolve_spec", "tree_shardings"]

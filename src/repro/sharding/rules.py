@@ -1,0 +1,165 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Params carry *logical* axis names; this module resolves them against a mesh.
+
+Conventions (see DESIGN.md §6):
+  - "fsdp"    -> the `data` mesh axis (params sharded for memory)
+  - "tensor"  -> the `model` mesh axis (heads / ff / experts / vocab)
+  - "batch"   -> (`pod`, `data`) for activations
+  - params are REPLICATED over `pod` (each pod = one FL client)
+  - a logical axis resolves to None (replicated) if the tensor dim is not
+    divisible by the mesh axis size — this is how small archs (whisper-tiny,
+    mamba2-130m heads) degrade gracefully instead of failing to lower.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+LOGICAL_TO_MESH = {
+    "fsdp": "data",
+    "tensor": "model",
+    "clients": "pod",       # explicit client (FL) dim of param replicas
+    "batch": ("pod", "data"),
+    "batch_nopod": "data",
+    "seq_mp": "model",      # sequence dim sharded over model (context parallel)
+    "seq_all": ("data", "model"),
+    "layers": None,
+    None: None,
+}
+
+
+def mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape.get(a, 1)
+        return n
+    return mesh.shape.get(axis, 1)
+
+
+import contextlib
+import threading
+
+_EXCLUDED = threading.local()
+_OVERRIDES = threading.local()
+
+
+@contextlib.contextmanager
+def logical_overrides(mapping):
+    """Re-map logical axes for a region — e.g. pure-FSDP parallelism maps
+    'tensor'->None and folds the `model` axis into batch/fsdp."""
+    prev = getattr(_OVERRIDES, "map", None)
+    _OVERRIDES.map = dict(mapping)
+    try:
+        yield
+    finally:
+        _OVERRIDES.map = prev
+
+
+PURE_FSDP = {
+    "batch": ("pod", "data", "model"),
+    "batch_nopod": ("data", "model"),
+    "fsdp": ("data", "model"),
+    "tensor": None,
+    "seq_mp": None,
+    "seq_all": ("data", "model"),
+}
+
+
+@contextlib.contextmanager
+def exclude_axes(*axes):
+    """Constraints inside this context never reference `axes` — required
+    inside vmap(spmd_axis_name=...) regions and shard_map manual regions."""
+    prev = getattr(_EXCLUDED, "axes", frozenset())
+    _EXCLUDED.axes = prev | frozenset(axes)
+    try:
+        yield
+    finally:
+        _EXCLUDED.axes = prev
+
+
+def _usable_axes(mesh: Mesh):
+    """Mesh axes that constraints may reference: present, not Manual
+    (inside a shard_map manual region), and not excluded (inside a
+    vmap(spmd_axis_name=...) region)."""
+    types = getattr(mesh, "_name_to_type", None)
+    excluded = getattr(_EXCLUDED, "axes", frozenset())
+    usable = set()
+    for a in mesh.shape:
+        if a in excluded:
+            continue
+        if types is not None and "Manual" in str(types.get(a, "")):
+            continue
+        usable.add(a)
+    return usable
+
+
+def resolve_spec(logical: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Mesh) -> P:
+    """Resolve logical axis names to a PartitionSpec, dropping axes whose size
+    does not divide the tensor dim (graceful replication)."""
+    usable = _usable_axes(mesh)
+    overrides = getattr(_OVERRIDES, "map", None)
+    out = []
+    for name, dim in zip(logical, shape):
+        if overrides is not None and name in overrides:
+            axis = overrides[name]
+        else:
+            axis = LOGICAL_TO_MESH.get(name, None)
+        # drop mesh axes missing from this mesh (e.g. 'pod' on single pod)
+        # or manual inside a shard_map region
+        if isinstance(axis, tuple):
+            axis = tuple(a for a in axis if a in usable)
+            if not axis:
+                axis = None
+            elif len(axis) == 1:
+                axis = axis[0]
+        elif axis is not None and axis not in usable:
+            axis = None
+        if axis is not None and dim % mesh_axis_size(mesh, axis) != 0:
+            axis = None
+        out.append(axis)
+    # trailing Nones can be dropped but keeping them is harmless
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, logical: Sequence[Optional[str]],
+                   shape: Sequence[int]) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(logical, shape, mesh))
+
+
+def tree_shardings(mesh: Mesh, logical_tree, shape_tree):
+    """Map a pytree of logical-axis tuples + matching ShapeDtypeStructs to
+    NamedShardings."""
+    return jax.tree.map(
+        lambda lg, sd: named_sharding(mesh, lg, sd.shape),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def constraint(x, *logical):
+    """with_sharding_constraint against the ambient mesh, dropping
+    non-divisible axes. Usable inside jit bodies."""
+    mesh = get_abstract_mesh_or_none()
+    if mesh is None:
+        return x
+    spec = resolve_spec(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def get_abstract_mesh_or_none():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if m is None or not m.shape:
+        return None
+    return m

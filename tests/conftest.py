@@ -1,0 +1,10 @@
+import os
+import sys
+
+# tests see the default single CPU device (the 512-device override is
+# dryrun.py-only, per the system design)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

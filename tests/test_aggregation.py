@@ -1,0 +1,105 @@
+"""AirComp aggregation: Alg. 2 exactness, Lemma 1 unbiasedness, baselines,
+simulation/production equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation, randk
+
+
+def test_aircomp_matches_manual():
+    key = jax.random.PRNGKey(0)
+    r, d, k = 3, 40, 10
+    updates = jax.random.normal(key, (r, d))
+    gains = jnp.array([0.1, 0.05, 0.02])
+    idx = randk.sample_indices(key, d, k)
+    beta = 0.7
+    sigma0 = 0.3
+    delta_hat, energy, y = aggregation.aircomp_aggregate(
+        updates, idx, gains, beta, key, d=d, sigma0=sigma0, r=r)
+    # manual: y = sum_i |h_i| (beta/|h_i|) A u_i + z = beta sum A u_i + z
+    noise = sigma0 * jax.random.normal(key, (k,))
+    y_manual = beta * jnp.sum(updates[:, idx], axis=0) + noise
+    np.testing.assert_allclose(y, y_manual, rtol=1e-5)
+    dh_manual = jnp.zeros((d,)).at[idx].set(y_manual) / (r * beta)
+    np.testing.assert_allclose(delta_hat, dh_manual, rtol=1e-5)
+    e_manual = jnp.sum((beta / gains[:, None] * updates[:, idx]) ** 2)
+    np.testing.assert_allclose(energy, e_manual, rtol=1e-5)
+
+
+def test_lemma1_unbiased_aggregate():
+    """E[Delta_hat] = (k/d) * mean_i Delta_i over omega and noise."""
+    key = jax.random.PRNGKey(1)
+    r, d, k = 4, 32, 8
+    updates = jax.random.normal(key, (r, d))
+    gains = jnp.full((r,), 0.05)
+    beta, sigma0 = 1.3, 0.5
+
+    def one(seed):
+        kk = jax.random.PRNGKey(seed)
+        idx = randk.sample_indices(kk, d, k)
+        dh, _, _ = aggregation.aircomp_aggregate(
+            updates, idx, gains, beta, jax.random.fold_in(kk, 1), d=d,
+            sigma0=sigma0, r=r)
+        return dh
+
+    mean = jnp.mean(jax.vmap(one)(jnp.arange(4000)), axis=0)
+    expect = (k / d) * jnp.mean(updates, axis=0)
+    np.testing.assert_allclose(mean, expect, atol=0.03)
+
+
+def test_unbiased_rescale_flag():
+    key = jax.random.PRNGKey(2)
+    r, d, k = 2, 16, 4
+    updates = jax.random.normal(key, (r, d))
+    gains = jnp.full((r,), 0.05)
+    idx = randk.sample_indices(key, d, k)
+    dh, _, _ = aggregation.aircomp_aggregate(
+        updates, idx, gains, 1.0, key, d=d, sigma0=0.0, r=r)
+    dh2, _, _ = aggregation.aircomp_aggregate(
+        updates, idx, gains, 1.0, key, d=d, sigma0=0.0, r=r,
+        unbiased_rescale=True)
+    np.testing.assert_allclose(dh2, dh * d / k, rtol=1e-6)
+
+
+def test_dp_fedavg_clips():
+    key = jax.random.PRNGKey(3)
+    updates = 100.0 * jax.random.normal(key, (5, 20))
+    out = aggregation.dp_fedavg_aggregate(updates, clip=1.0, sigma=0.0,
+                                          noise_key=key, r=5)
+    assert float(jnp.linalg.norm(out)) <= 1.0 + 1e-5
+
+
+def test_fedavg_mean():
+    u = jnp.arange(12.0).reshape(3, 4)
+    np.testing.assert_allclose(aggregation.fedavg_aggregate(u),
+                               u.mean(0), rtol=1e-6)
+
+
+def test_production_aggregate_single_client_noise_free():
+    """Production (mask-mode) path: with sigma0=0 and r=1 the output is
+    beta-invariant and equals mask * update."""
+    key = jax.random.PRNGKey(4)
+    tree = {"w": jax.random.normal(key, (8, 8)),
+            "b": jax.random.normal(key, (8,))}
+    masks = randk.mask_tree(key, tree, 0.5)
+    out = aggregation.pfels_production_aggregate(
+        tree, masks, beta=3.0, r=1, sigma0=0.0, noise_key=key,
+        axis_name=None)
+    expect = randk.apply_mask_tree(tree, masks)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(expect)):
+        np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_production_noise_only_on_masked_coords():
+    key_mask, key_noise = jax.random.split(jax.random.PRNGKey(5))
+    tree = {"w": jnp.zeros((64, 64))}
+    masks = randk.mask_tree(key_mask, tree, 0.25)
+    out = aggregation.pfels_production_aggregate(
+        tree, masks, beta=1.0, r=1, sigma0=1.0, noise_key=key_noise,
+        axis_name=None)
+    m = masks["w"]
+    # unmasked coordinates receive no noise
+    assert float(jnp.max(jnp.abs(out["w"] * (1 - m)))) == 0.0
+    assert float(jnp.std(out["w"][m.astype(bool)])) > 0.5

@@ -1,0 +1,41 @@
+"""Wireless channel model (§4.1, §8.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ChannelConfig
+from repro.core import channel
+
+
+def test_gain_distribution():
+    cfg = ChannelConfig()
+    g = channel.sample_gains(jax.random.PRNGKey(0), 20000, cfg)
+    assert float(g.min()) >= cfg.gain_clip[0] * (1 - 1e-5)  # f32 rounding
+    assert float(g.max()) <= cfg.gain_clip[1] * (1 + 1e-5)
+    # exponential(0.02) clipped: mean close to 0.02
+    assert abs(float(g.mean()) - 0.02) < 0.005
+
+
+def test_power_limits_match_snr_range():
+    cfg = ChannelConfig()
+    d = 1000
+    p = channel.sample_power_limits(jax.random.PRNGKey(1), 5000, d, cfg)
+    snr_db = 10 * jnp.log10(p / (d * cfg.noise_std ** 2))
+    assert float(snr_db.min()) >= cfg.snr_db_range[0] - 1e-3
+    assert float(snr_db.max()) <= cfg.snr_db_range[1] + 1e-3
+
+
+def test_noise_std():
+    cfg = ChannelConfig(noise_std=2.0)
+    z = channel.sample_noise(jax.random.PRNGKey(2), 100000, cfg)
+    assert abs(float(z.std()) - 2.0) < 0.05
+
+
+def test_receive_superposition():
+    """y = sum_i |h_i| x_i + z (Eq. 7)."""
+    sig = jnp.array([[1.0, 2.0], [3.0, 4.0]])
+    gains = jnp.array([0.5, 2.0])
+    noise = jnp.array([0.1, -0.1])
+    y = channel.receive(sig, gains, noise)
+    np.testing.assert_allclose(y, [0.5 + 6 + 0.1, 1 + 8 - 0.1], rtol=1e-6)

@@ -1,0 +1,58 @@
+"""Error-feedback option [28-30]: residual memory accumulates the
+untransmitted mass and improves sparsified convergence."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.configs import PFELSConfig
+from repro.configs.paper_models import BENCH_MLP
+from repro.data import make_federated_classification
+from repro.fl import evaluate, make_round_fn, setup
+from repro.models import cnn
+
+
+def _problem():
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_cnn(key, BENCH_MLP)
+    flat, unravel = ravel_pytree(params)
+    x, y, xt, yt = make_federated_classification(
+        key, n_clients=20, per_client=30, num_classes=10,
+        image_shape=(1, 8, 8))
+    loss_fn = lambda p, b: cnn.cnn_loss(p, BENCH_MLP, b)
+    return params, flat.shape[0], unravel, (x, y, xt, yt), loss_fn
+
+
+def test_error_feedback_runs_and_accumulates():
+    params, d, unravel, (x, y, xt, yt), loss_fn = _problem()
+    cfg = PFELSConfig(num_clients=20, clients_per_round=4, local_steps=3,
+                      local_lr=0.05, compression_ratio=0.2, epsilon=4.0,
+                      rounds=3, error_feedback=True)
+    state = setup(jax.random.PRNGKey(1), params, cfg, d)
+    assert state.residuals.shape == (20, d)
+    fn = make_round_fn(cfg, loss_fn, d, unravel)
+    p, res = params, state.residuals
+    for t in range(3):
+        p, m, res = fn(p, state.power_limits, x, y,
+                       jax.random.PRNGKey(10 + t), res)
+    # residual mass exists for the clients that participated
+    assert float(jnp.sum(jnp.abs(res))) > 0
+    assert jnp.isfinite(m["train_loss"])
+
+
+def test_error_feedback_residual_is_untransmitted_mass():
+    """For a participating client: residual = update - sparsified(update),
+    i.e. exactly the coordinates outside omega."""
+    params, d, unravel, (x, y, xt, yt), loss_fn = _problem()
+    cfg = PFELSConfig(num_clients=20, clients_per_round=20, local_steps=2,
+                      local_lr=0.05, compression_ratio=0.25, epsilon=4.0,
+                      rounds=1, error_feedback=True)
+    state = setup(jax.random.PRNGKey(1), params, cfg, d)
+    fn = make_round_fn(cfg, loss_fn, d, unravel)
+    p, m, res = fn(params, state.power_limits, x, y,
+                   jax.random.PRNGKey(0), state.residuals)
+    k = int(round(0.25 * d))
+    # every client participated; each residual has exactly d-k nonzeros
+    # (up to exact zero update coords)
+    nz = jnp.sum(res != 0, axis=1)
+    assert int(nz.max()) <= d - k

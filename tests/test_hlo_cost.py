@@ -1,0 +1,66 @@
+"""The HLO cost model (dry-run roofline source) vs analytic counts."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze_hlo
+
+
+def _cost(f, *args):
+    c = jax.jit(f).lower(*args).compile()
+    return analyze_hlo(c.as_text())
+
+
+def test_single_matmul():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    r = _cost(lambda a, b: a @ b, x, x)
+    assert r["flops"] == pytest.approx(2 * 256 ** 3, rel=0.05)
+
+
+def test_scan_multiplies_trip_count():
+    def g(a, b):
+        def body(x, _):
+            return x @ b, None
+        y, _ = jax.lax.scan(body, a, None, length=10)
+        return y
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    r = _cost(g, x, x)
+    assert r["flops"] == pytest.approx(10 * 2 * 256 ** 3, rel=0.05)
+
+
+def test_nested_scans():
+    def h(a, b):
+        def outer(x, _):
+            def inner(y, _):
+                return y @ b, None
+            y, _ = jax.lax.scan(inner, x, None, length=5)
+            return y, None
+        y, _ = jax.lax.scan(outer, a, None, length=4)
+        return y
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    r = _cost(h, x, x)
+    assert r["flops"] == pytest.approx(20 * 2 * 256 ** 3, rel=0.05)
+
+
+def test_grad_of_scan_counts_backward():
+    def loss(w, x):
+        def body(h, _):
+            return jnp.tanh(h @ w), None
+        h, _ = jax.lax.scan(body, x, None, length=8)
+        return jnp.sum(h ** 2)
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    r = _cost(jax.grad(loss), x, x)
+    # fwd + 2 bwd matmuls per layer = 3x
+    assert r["flops"] >= 0.9 * 3 * 8 * 2 * 256 ** 3
+
+
+def test_bytes_nonzero_and_scaled_by_loop():
+    def g(a):
+        def body(x, _):
+            return x + 1.0, None
+        y, _ = jax.lax.scan(body, a, None, length=50)
+        return y
+    x = jax.ShapeDtypeStruct((1024, 128), jnp.float32)
+    r = _cost(g, x)
+    # ~50 iterations x (read + write) x 512KiB
+    assert r["bytes"] >= 50 * 2 * 1024 * 128 * 4 * 0.9

@@ -1,0 +1,88 @@
+"""Theorem 5 power control + Lemma 5 power-limit satisfaction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel, power_control, privacy, randk
+from repro.configs.base import ChannelConfig
+
+
+KW = dict(c1=1.0, eta=0.05, tau=5, epsilon=1.5, r=8, n=100, delta=1e-2,
+          sigma0=1.0)
+
+
+def test_theorem5_is_min_of_caps():
+    key = jax.random.PRNGKey(0)
+    cfg = ChannelConfig()
+    gains = channel.sample_gains(key, 8, cfg)
+    p = channel.sample_power_limits(key, 8, 1000, cfg)
+    d, k = 1000, 300
+    beta = power_control.beta_pfels(gains, p, d=d, k=k, **KW)
+    cap_pow = power_control.beta_power_cap(gains, p, d, k, KW["c1"],
+                                           KW["eta"], KW["tau"])
+    cap_priv = privacy.beta_privacy_cap(KW["epsilon"], KW["eta"], KW["tau"],
+                                        KW["c1"], KW["r"], KW["n"],
+                                        KW["delta"], KW["sigma0"])
+    assert float(beta) == pytest.approx(min(float(cap_pow), cap_priv))
+
+
+def test_theorem5_beats_grid_search():
+    """beta* from (35) is the max feasible beta (P2 objective decreasing)."""
+    key = jax.random.PRNGKey(1)
+    cfg = ChannelConfig()
+    gains = channel.sample_gains(key, 8, cfg)
+    p = channel.sample_power_limits(key, 8, 1000, cfg)
+    d, k = 1000, 300
+    beta_star = float(power_control.beta_pfels(gains, p, d=d, k=k, **KW))
+    c2 = privacy.c2_coefficient(KW["eta"], KW["tau"], KW["c1"], KW["r"],
+                                KW["n"], KW["delta"], KW["sigma0"])
+
+    def feasible(b):
+        ok_priv = c2 * b <= KW["epsilon"] + 1e-12
+        per = gains * jnp.sqrt(float(d) * p) / (
+            KW["c1"] * KW["eta"] * KW["tau"] * jnp.sqrt(float(k)))
+        return ok_priv and b <= float(jnp.min(per)) + 1e-12
+
+    assert feasible(beta_star)
+    assert not feasible(beta_star * 1.01)
+
+
+def test_power_limit_satisfied_statistically():
+    """E||x_i||^2 <= P_i when beta uses the Lemma-5 bound."""
+    key = jax.random.PRNGKey(2)
+    cfg = ChannelConfig()
+    r, d, k = 4, 512, 128
+    gains = channel.sample_gains(key, r, cfg)
+    p = channel.sample_power_limits(key, r, d, cfg)
+    beta = power_control.beta_pfels(gains, p, d=d, k=k, **KW)
+    # worst-case update norm eta*tau*C1 (Assumption 1)
+    u = jax.random.normal(key, (d,))
+    u = u / jnp.linalg.norm(u) * KW["eta"] * KW["tau"] * KW["c1"]
+    energies = []
+    for s in range(300):
+        idx = randk.sample_indices(jax.random.PRNGKey(s), d, k)
+        for i in range(r):
+            x_i = (beta / gains[i]) * randk.project(u, idx)
+            energies.append((i, float(jnp.sum(x_i ** 2))))
+    for i in range(r):
+        mean_e = np.mean([e for j, e in energies if j == i])
+        assert mean_e <= float(p[i]) * 1.05
+
+
+def test_wfl_pdp_caps_wfl_p():
+    key = jax.random.PRNGKey(3)
+    cfg = ChannelConfig()
+    gains = channel.sample_gains(key, 8, cfg)
+    p = channel.sample_power_limits(key, 8, 1000, cfg)
+    kw = {k: v for k, v in KW.items() if k in ("c1", "eta", "tau")}
+    b_p = power_control.beta_wfl_p(gains, p, **kw)
+    b_pdp = power_control.beta_wfl_pdp(gains, p, **KW)
+    assert float(b_pdp) <= float(b_p) + 1e-12
+
+
+def test_transmit_energy_formula():
+    gains = jnp.array([0.5, 0.25])
+    sq = jnp.array([2.0, 8.0])
+    e = power_control.transmit_energy(1.0, gains, sq)
+    assert float(e) == pytest.approx(2.0 / 0.25 + 8.0 / 0.0625)

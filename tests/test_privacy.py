@@ -1,0 +1,111 @@
+"""Client-level DP accounting: Theorems 1-3, Lemma 2, composition."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import privacy, randk
+from repro.fl.client import local_train, model_update
+from jax.flatten_util import ravel_pytree
+
+
+def test_c2_formula():
+    """C2 = 2 sqrt(2) eta tau C1 r sqrt(log(1.25 r/(N delta)))/(N sigma0)."""
+    eta, tau, c1, r, n, delta, s0 = 0.05, 5, 1.0, 32, 1000, 1e-3, 1.0
+    expect = (2 * math.sqrt(2) * eta * tau * c1 * r
+              * math.sqrt(math.log(1.25 * r / (n * delta)))) / (n * s0)
+    assert privacy.c2_coefficient(eta, tau, c1, r, n, delta, s0) == \
+        pytest.approx(expect)
+
+
+def test_beta_cap_inverse_of_round_epsilon():
+    kw = dict(eta=0.05, tau=5, c1=1.0, r=32, n=1000, delta=1e-3, sigma0=1.0)
+    beta = privacy.beta_privacy_cap(1.5, **kw)
+    assert privacy.round_epsilon(beta, **kw) == pytest.approx(1.5)
+
+
+def test_gaussian_mechanism_sigma_matches_thm1():
+    psi, eps, delta = 2.0, 0.5, 1e-5
+    sigma = privacy.gaussian_mechanism_sigma(psi, eps, delta)
+    assert sigma ** 2 >= 2 * math.log(1.25 / delta) * psi ** 2 / eps ** 2 \
+        - 1e-9
+
+
+def test_amplification_monotone_and_below_eps():
+    """Thm 2: subsampled epsilon < eps0, increasing in r."""
+    eps0 = 0.8
+    prev = 0.0
+    for r in (1, 10, 100, 1000):
+        e = privacy.amplified_epsilon(eps0, r, 1000)
+        assert e <= eps0 + 1e-12
+        assert e >= prev
+        prev = e
+
+
+def test_composition():
+    e_basic, d_basic = privacy.compose_basic(0.1, 1e-5, 100)
+    assert e_basic == pytest.approx(10.0)
+    e_adv, d_adv = privacy.compose_advanced(0.1, 1e-5, 100)
+    assert e_adv < e_basic  # advanced composition is tighter here
+    assert d_adv > 100 * 1e-5  # pays delta'
+
+
+def test_lemma2_sensitivity_empirical():
+    """||beta A Delta_e||_2 <= beta eta tau C1 for real local training
+    (momentum=0, as in the analysis)."""
+    key = jax.random.PRNGKey(0)
+    d_in, classes = 10, 3
+    params = {"w": jax.random.normal(key, (d_in, classes)) * 0.1,
+              "b": jnp.zeros((classes,))}
+
+    def loss_fn(p, batch):
+        logits = batch["x"] @ p["w"] + p["b"]
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, batch["y"][:, None], 1)[:, 0]
+        return jnp.mean(nll), {"accuracy": jnp.zeros(())}
+
+    eta, tau, c1 = 0.1, 4, 0.7
+    x = jax.random.normal(key, (40, d_in))
+    y = jax.random.randint(key, (40,), 0, classes)
+    flat0, unravel = ravel_pytree(params)
+    worst = 0.0
+    for seed in range(20):
+        p_new, _ = local_train(params, x, y, jax.random.PRNGKey(seed),
+                               loss_fn=loss_fn, steps=tau, lr=eta, clip=c1,
+                               momentum=0.0, batch_size=8)
+        delta = ravel_pytree(model_update(params, p_new))[0]
+        worst = max(worst, float(jnp.linalg.norm(delta)))
+    beta = 2.3
+    # Lemma 2: sensitivity of ONE client's contribution
+    assert beta * worst <= beta * eta * tau * c1 + 1e-5
+
+
+def test_ledger():
+    led = privacy.PrivacyLedger(n=100, delta=1e-2)
+    for _ in range(10):
+        led.spend(0.2)
+    e, d = led.total_basic()
+    assert e == pytest.approx(2.0) and d == pytest.approx(0.1)
+    e_adv, _ = led.total_advanced()
+    assert e_adv > 0
+
+
+def test_zcdp_composition_tighter_than_basic():
+    """zCDP beats basic composition at many rounds for the same mechanism."""
+    z = 2.0   # noise multiplier
+    rounds, delta = 500, 1e-5
+    eps_zcdp, _ = privacy.compose_zcdp(z, rounds, delta)
+    # per-round (eps0, delta) of the same Gaussian (Thm 1 inverse):
+    eps0 = math.sqrt(2 * math.log(1.25 / delta)) / z
+    eps_basic = eps0 * rounds
+    assert eps_zcdp < eps_basic
+    # and scales ~sqrt(T): doubling T shouldn't double eps
+    eps2, _ = privacy.compose_zcdp(z, 2 * rounds, delta)
+    assert eps2 < 1.75 * eps_zcdp
+
+
+def test_pfels_noise_multiplier():
+    z = privacy.pfels_noise_multiplier(2.0, 0.05, 5, 1.0, 1.0)
+    assert z == pytest.approx(1.0 / (2.0 * 0.05 * 5))

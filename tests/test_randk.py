@@ -1,0 +1,95 @@
+"""rand_k sparsification: Lemma 1 / Lemma 10 identities + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import randk
+
+
+def test_project_unproject_roundtrip():
+    key = jax.random.PRNGKey(0)
+    d, k = 100, 30
+    x = jax.random.normal(key, (d,))
+    idx = randk.sample_indices(key, d, k)
+    y = randk.project(x, idx)
+    assert y.shape == (k,)
+    back = randk.unproject(y, idx, d)
+    # exactly k nonzero coords, matching x there
+    assert int(jnp.sum(back != 0)) <= k
+    np.testing.assert_allclose(back[idx], x[idx], rtol=1e-6)
+
+
+def test_lemma10_unbiasedness():
+    """E[A^T A x] = (k/d) x over the random subset omega."""
+    key = jax.random.PRNGKey(1)
+    d, k, trials = 64, 16, 3000
+    x = jax.random.normal(key, (d,))
+    keys = jax.random.split(jax.random.PRNGKey(2), trials)
+    sparsified = jax.vmap(
+        lambda kk: randk.sparsify(x, randk.sample_indices(kk, d, k), d)
+    )(keys)
+    mean = jnp.mean(sparsified, axis=0)
+    np.testing.assert_allclose(mean, (k / d) * x, atol=0.05)
+
+
+def test_lemma10_variance():
+    """E||A^T A x - x||^2 = (1 - k/d) ||x||^2."""
+    key = jax.random.PRNGKey(3)
+    d, k, trials = 64, 16, 3000
+    x = jax.random.normal(key, (d,))
+    keys = jax.random.split(jax.random.PRNGKey(4), trials)
+    errs = jax.vmap(
+        lambda kk: jnp.sum((randk.sparsify(
+            x, randk.sample_indices(kk, d, k), d) - x) ** 2))(keys)
+    expected = (1 - k / d) * float(jnp.sum(x ** 2))
+    assert abs(float(jnp.mean(errs)) - expected) / expected < 0.05
+
+
+def test_lemma5_projection_energy():
+    """E||A x||^2 = (k/d)||x||^2 (core of Lemma 5)."""
+    key = jax.random.PRNGKey(5)
+    d, k, trials = 64, 16, 3000
+    x = jax.random.normal(key, (d,))
+    keys = jax.random.split(jax.random.PRNGKey(6), trials)
+    en = jax.vmap(lambda kk: jnp.sum(randk.project(
+        x, randk.sample_indices(kk, d, k)) ** 2))(keys)
+    expected = (k / d) * float(jnp.sum(x ** 2))
+    assert abs(float(jnp.mean(en)) - expected) / expected < 0.05
+
+
+def test_mask_mode_first_moment_matches_exact():
+    """Seeded Bernoulli(p) masks have the same first moment k/d = p."""
+    key = jax.random.PRNGKey(7)
+    tree = {"a": jnp.ones((50, 20)), "b": jnp.ones((333,))}
+    p = 0.3
+    total, kept = 0, 0.0
+    for i in range(200):
+        masks = randk.mask_tree(jax.random.fold_in(key, i), tree, p)
+        kept += sum(float(jnp.sum(m)) for m in jax.tree.leaves(masks))
+        total += sum(m.size for m in jax.tree.leaves(masks))
+    assert abs(kept / total - p) < 0.01
+
+
+def test_mask_shared_seed_is_deterministic():
+    key = jax.random.PRNGKey(8)
+    tree = {"w": jnp.zeros((17, 5))}
+    m1 = randk.mask_tree(key, tree, 0.5)
+    m2 = randk.mask_tree(key, tree, 0.5)
+    assert bool(jnp.all(m1["w"] == m2["w"]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(d=st.integers(2, 200), frac=st.floats(0.05, 1.0))
+def test_property_exact_k_selected(d, frac):
+    k = max(1, min(d, int(d * frac)))
+    idx = randk.sample_indices(jax.random.PRNGKey(d), d, k)
+    assert idx.shape == (k,)
+    assert len(np.unique(np.asarray(idx))) == k      # without replacement
+    assert int(idx.min()) >= 0 and int(idx.max()) < d
+
+
+def test_lambda_k():
+    assert randk.lambda_k(0, 10) == 1.0
+    assert randk.lambda_k(10, 10) == 0.0

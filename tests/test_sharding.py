@@ -1,0 +1,72 @@
+"""Sharding rules: divisibility fallback, cache specs, exclusions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, AxisType, PartitionSpec as P
+
+from repro.models.attention import kv_cache_spec
+from repro.sharding.rules import exclude_axes, resolve_spec
+
+
+@pytest.fixture
+def mesh():
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+
+def test_resolve_divisible(mesh):
+    assert resolve_spec(("fsdp", "tensor"), (4, 8), mesh) == P("data",
+                                                               "model")
+
+
+def test_resolve_drops_missing_axis(mesh):
+    # 'pod' missing from this mesh -> batch = data only
+    assert resolve_spec(("batch", None), (4, 4), mesh) == P("data", None)
+
+
+def test_exclude_axes(mesh):
+    with exclude_axes("data"):
+        assert resolve_spec(("fsdp", "tensor"), (4, 8), mesh) == \
+            P(None, "model")
+    assert resolve_spec(("fsdp", "tensor"), (4, 8), mesh) == P("data",
+                                                               "model")
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_kv_cache_spec_batch_shardable():
+    """Batch over data, head_dim over model (local decode token write)."""
+    m = FakeMesh({"data": 16, "model": 16})
+    spec = kv_cache_spec((128, 32768, 8, 128), m)
+    assert spec == (("data",), None, None, "model")
+
+
+def test_kv_cache_spec_batch1_long():
+    """batch=1: replicate batch; still shard head_dim over model."""
+    m = FakeMesh({"data": 16, "model": 16})
+    spec = kv_cache_spec((1, 524288, 8, 128), m)
+    assert spec[0] is None
+    assert spec[3] == "model"
+
+
+def test_kv_cache_spec_heads_fallback():
+    """Dh not divisible -> fall back to kv heads over model."""
+    m = FakeMesh({"data": 16, "model": 16})
+    spec = kv_cache_spec((128, 32768, 32, 100), m)
+    assert spec == (("data",), None, "model", None)
+
+
+def test_kv_cache_spec_multipod():
+    m = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = kv_cache_spec((128, 32768, 8, 128), m)
+    assert spec[0] == ("pod", "data")
+
+
+def test_nondivisible_replicates(mesh):
+    # dim 5 not divisible by nothing on a 1-dev mesh, still fine
+    s = resolve_spec(("tensor",), (5,), mesh)
+    assert s == P(None) or s == P("model")  # model axis size 1 divides
