@@ -11,8 +11,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.core import aggregation, randk
 from repro.kernels.clip_norm.ops import clip_flat
 from repro.kernels.flash_attn.ops import attention
+from repro.kernels.pfels_transmit.ops import fused_transmit
 from repro.kernels.randk_gather.ops import gather_rows
 from repro.kernels.ssd_scan.ops import ssd_scan
 
@@ -23,6 +25,65 @@ def _time(f, *args, reps=5):
     for _ in range(reps):
         jax.block_until_ready(f(*args))
     return (time.time() - t0) / reps * 1e6
+
+
+def bench_pfels_transmit(key, rows, *, r=16, d=128 * 512):
+    """Fused transmit pipeline (clip->rand_k->scale->AirComp) vs the
+    unfused vmapped-ops path, whole (r, d) batch."""
+    k = d // 4
+    updates = jax.random.normal(key, (r, d))
+    gains = jnp.full((r,), 0.05)
+    idx = randk.sample_indices(key, d, k)
+    kw = dict(d=d, sigma0=0.3, r=r)
+
+    us = _time(jax.jit(lambda u: aggregation.aircomp_aggregate(
+        u, idx, gains, 0.8, key, **kw)), updates)
+    rows.append(("pfels_transmit_unfused", us, f"r={r},d={d},k={k}"))
+    for use_kernel, tag in ((False, "fused_ref"), (True, "fused_pallas")):
+        us = _time(jax.jit(lambda u: fused_transmit(
+            u, idx, gains, 0.8, key, use_kernel=use_kernel, **kw)), updates)
+        rows.append((f"pfels_transmit_{tag}", us, f"r={r},d={d},k={k}"))
+
+
+def bench_round_drivers(rows, *, t_rounds=8):
+    """T rounds: python loop over the jitted round_fn (one dispatch per
+    round) vs one lax.scan-compiled program (make_training_fn)."""
+    from jax.flatten_util import ravel_pytree
+
+    from repro.configs import PFELSConfig
+    from repro.configs.paper_models import BENCH_MLP
+    from repro.data import make_federated_classification
+    from repro.fl import make_round_fn, make_training_fn, setup
+    from repro.models import cnn
+
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_cnn(key, BENCH_MLP)
+    flat, unravel = ravel_pytree(params)
+    d = flat.shape[0]
+    x, y, _, _ = make_federated_classification(
+        key, n_clients=30, per_client=30, num_classes=10,
+        image_shape=(1, 8, 8))
+    loss_fn = lambda p, b: cnn.cnn_loss(p, BENCH_MLP, b)
+    cfg = PFELSConfig(num_clients=30, clients_per_round=8, local_steps=3,
+                      rounds=t_rounds)
+    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+
+    fn = make_round_fn(cfg, loss_fn, d, unravel)
+    keys = jax.random.split(jax.random.PRNGKey(2), t_rounds)
+
+    def loop():
+        p = params
+        for t in range(t_rounds):
+            p, m = fn(p, st.power_limits, x, y, keys[t])
+        return p
+
+    us = _time(lambda: jax.tree.leaves(loop())[0], reps=3)
+    rows.append(("rounds_python_loop", us, f"T={t_rounds},d={d}"))
+
+    tf = make_training_fn(cfg, loss_fn, d, unravel, rounds=t_rounds)
+    us = _time(lambda: tf(params, st.power_limits, x, y,
+                          jax.random.PRNGKey(2))[0], reps=3)
+    rows.append(("rounds_lax_scan", us, f"T={t_rounds},d={d}"))
 
 
 def run():
@@ -60,6 +121,9 @@ def run():
         us = _time(lambda: attention(qf, kf, kf, use_kernel=use_kernel),
                    reps=2)
         rows.append((f"flash_attn_{tag}", us, "b1s512h8kv2d64"))
+
+    bench_pfels_transmit(key, rows)
+    bench_round_drivers(rows)
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

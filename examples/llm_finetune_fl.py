@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs import ChannelConfig, PFELSConfig, reduced_config
 from repro.data import make_lm_sequences
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.launch.steps import make_pfels_train_step
 from repro.models import transformer as T
 from repro import checkpoint
@@ -56,7 +56,7 @@ def main():
                         channel=ChannelConfig(gain_clip=(2e-3, 0.1)))
     step = make_pfels_train_step(cfg, pfels, d, mesh)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step_j = jax.jit(step)
         p = params
         t0 = time.time()

@@ -200,6 +200,15 @@ class PFELSConfig:
     # the shared-subcarrier alignment AirComp requires)
     randk_mode: str = "exact"
     grad_accum: int = 1               # microbatches per step (memory knob)
+    # fused transmit pipeline: route PFELS aggregation through the
+    # kernels/pfels_transmit Pallas path (clip -> rand_k -> power scale ->
+    # noisy AirComp sum in one pass over d-tiles, no (r, d) intermediates).
+    # False keeps the unfused pure-JAX reference path (seed behavior).
+    use_fused_kernel: bool = False
+    # optional transmit-side per-client l2 cap C: each Delta_i is scaled by
+    # min(1, C/||Delta_i||) before sparsification, enforcing the Theorem-5
+    # premise ||Delta|| <= eta tau C1. None disables.
+    transmit_clip: Optional[float] = None
     channel: ChannelConfig = field(default_factory=ChannelConfig)
 
     def resolved_delta(self) -> float:

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from repro.configs.base import ChannelConfig
 from repro.core import channel as chan
 from repro.core import randk
+from repro.kernels.pfels_transmit import ref as transmit_ref
 
 
 # ------------------------------------------------------------- simulation
@@ -18,8 +19,8 @@ from repro.core import randk
 def aircomp_aggregate(updates_flat, idx, gains, beta, noise_key, *,
                       d: int, sigma0: float, r: int,
                       unbiased_rescale: bool = False,
-                      gains_est=None):
-    """Exact Alg. 2 lines 12–16.
+                      gains_est=None, clip: Optional[float] = None):
+    """Exact Alg. 2 lines 12–16 (unfused reference path).
 
     updates_flat: (r, d) per-client updates Delta_i; idx: (k,) rand_k subset;
     gains: (r,) |h_i|. Clients transmit x_i = (beta/|h_i|) A Delta_i, the MAC
@@ -30,9 +31,17 @@ def aircomp_aggregate(updates_flat, idx, gains, beta, noise_key, *,
     (imperfect CSI); precompensation uses gains_est while the physical MAC
     applies the true gains, leaving per-client misalignment h/h_est.
 
+    clip: optional per-client transmit-side l2 cap C — each Delta_i is
+    scaled by min(1, C/||Delta_i||) before sparsification, enforcing the
+    ||Delta|| <= eta tau C1 premise of Theorem 5 even when local training
+    overshoots. None disables (seed behavior).
+
     Returns (delta_hat (d,), energy, y (k,)).
     """
     k = idx.shape[0]
+    if clip is not None:
+        updates_flat = updates_flat * transmit_ref.clip_scales(
+            updates_flat, clip)[:, None]
     proj = jax.vmap(lambda u: randk.project(u, idx))(updates_flat)  # (r, k)
     comp = gains_est if gains_est is not None else gains
     signals = (beta / comp)[:, None] * proj                         # x_i
@@ -43,6 +52,25 @@ def aircomp_aggregate(updates_flat, idx, gains, beta, noise_key, *,
         delta_hat = delta_hat * (d / k)
     energy = jnp.sum(signals.astype(jnp.float32) ** 2)
     return delta_hat, energy, y
+
+
+def aircomp_aggregate_fused(updates_flat, idx, gains, beta, noise_key, *,
+                            d: int, sigma0: float, r: int,
+                            unbiased_rescale: bool = False,
+                            gains_est=None, clip: Optional[float] = None,
+                            use_kernel: bool = True,
+                            interpret: Optional[bool] = None):
+    """Fused-pipeline variant of :func:`aircomp_aggregate` — identical
+    contract and PRNG-noise draw, executed by the ``pfels_transmit`` Pallas
+    kernel in one pass over tiles of d with no (r, d) sparsified/scaled
+    intermediates. ``use_kernel=False`` runs the pure-JAX fused reference
+    (ref.py) instead, for parity testing; ``interpret=None`` compiles the
+    kernel on TPU and interprets elsewhere."""
+    from repro.kernels.pfels_transmit.ops import fused_transmit
+    return fused_transmit(updates_flat, idx, gains, beta, noise_key, d=d,
+                          sigma0=sigma0, r=r, clip=clip, gains_est=gains_est,
+                          unbiased_rescale=unbiased_rescale,
+                          use_kernel=use_kernel, interpret=interpret)
 
 
 def dp_fedavg_aggregate(updates_flat, clip: float, sigma: float, noise_key, *,

@@ -1,6 +1,7 @@
 from repro.fl.client import local_train, model_update
 from repro.fl.rounds import (FLState, evaluate, make_round_fn,
-                             round_epsilon_spent, setup)
+                             make_training_fn, round_epsilon_spent, setup)
 
 __all__ = ["local_train", "model_update", "FLState", "evaluate",
-           "make_round_fn", "round_epsilon_spent", "setup"]
+           "make_round_fn", "make_training_fn", "round_epsilon_spent",
+           "setup"]

@@ -18,6 +18,7 @@ from jax.flatten_util import ravel_pytree
 from repro.configs.base import PFELSConfig
 from repro.core import aggregation, channel, power_control, privacy, randk
 from repro.fl.client import local_train, model_update
+from repro.kernels.pfels_transmit import ref as transmit_ref
 
 
 @dataclass
@@ -36,21 +37,20 @@ def setup(key, params, cfg: PFELSConfig, d: int) -> FLState:
     return FLState(params=params, power_limits=p_lim, residuals=res)
 
 
-def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
-                  unravel: Callable):
-    """Builds the jitted round function.
-
-    loss_fn(params, {"x","y"}) -> (loss, aux). d = flat dim; unravel maps a
-    flat (d,) vector back to the params pytree.
-    """
+def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
+                      unravel: Callable):
+    """The raw (un-jitted) round body, uniform across algorithms: returns
+    ``(new_params, metrics, new_residuals, delta_hat)`` so it can back both
+    the single-round ``make_round_fn`` wrapper and the ``lax.scan`` driver
+    in ``make_training_fn``."""
     k_coords = max(int(round(cfg.compression_ratio * d)), 1)
     alg = cfg.algorithm
     delta = cfg.resolved_delta()
     sigma0 = cfg.channel.noise_std
     r = cfg.clients_per_round
 
-    def round_fn(params, power_limits, data_x, data_y, key,
-                 residuals=None, prev_delta=None):
+    def round_core(params, power_limits, data_x, data_y, key,
+                   residuals=None, prev_delta=None):
         ks = jax.random.split(key, 7)
         # ---- sample r clients without replacement (Alg. 2 line 2)
         sel = jax.random.choice(ks[0], cfg.num_clients, (r,), replace=False)
@@ -93,13 +93,21 @@ def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
                     # the top coords of |Delta_hat_{t-1}| (shared across
                     # clients -> AirComp alignment preserved), half explored
                     # uniformly — pure top-k locks its support (coords never
-                    # transmitted keep |Delta_hat|=0 and are never selected)
-                    k1 = k_coords // 2
-                    _, idx_top = jax.lax.top_k(jnp.abs(prev_delta), k1)
-                    scores = jax.random.uniform(ks[3], (d,))
-                    scores = scores.at[idx_top].set(-jnp.inf)
-                    _, idx_rand = jax.lax.top_k(scores, k_coords - k1)
-                    idx = jnp.concatenate([idx_top, idx_rand])
+                    # transmitted keep |Delta_hat|=0 and are never selected).
+                    # A zero prev_delta (the scan driver's cold start) falls
+                    # back to the uniform sample — top_k over |zeros| would
+                    # deterministically pick coords 0..k1-1, biasing round 1.
+                    def _warm_idx():
+                        k1 = k_coords // 2
+                        _, idx_top = jax.lax.top_k(jnp.abs(prev_delta), k1)
+                        scores = jax.random.uniform(ks[3], (d,))
+                        scores = scores.at[idx_top].set(-jnp.inf)
+                        _, idx_rand = jax.lax.top_k(scores, k_coords - k1)
+                        return jnp.concatenate([idx_top, idx_rand])
+
+                    idx = jax.lax.cond(
+                        jnp.linalg.norm(prev_delta) > 0, _warm_idx,
+                        lambda: randk.sample_indices(ks[3], d, k_coords))
                 else:
                     idx = randk.sample_indices(ks[3], d, k_coords)
                 beta = power_control.beta_pfels(
@@ -120,14 +128,26 @@ def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
                         gains, p_sel, c1=cfg.clip, eta=cfg.local_lr,
                         tau=cfg.local_steps, epsilon=cfg.epsilon, r=r,
                         n=cfg.num_clients, delta=delta, sigma0=sigma0)
-            delta_hat, energy, _ = aggregation.aircomp_aggregate(
-                flat_updates, idx, gains, beta, ks[4], d=d, sigma0=sigma0,
+            aggregate = (aggregation.aircomp_aggregate_fused
+                         if cfg.use_fused_kernel
+                         else aggregation.aircomp_aggregate)
+            # error feedback needs the clip scales for the residual anyway,
+            # so compute them ONCE here and hand the aggregator pre-clipped
+            # updates (clip=None) instead of paying a second full (r, d)
+            # norm sweep inside the fused kernel's client_sumsq pass
+            agg_updates, agg_clip = flat_updates, cfg.transmit_clip
+            if cfg.transmit_clip is not None and cfg.error_feedback:
+                transmit_scales = transmit_ref.clip_scales(
+                    flat_updates, cfg.transmit_clip)
+                agg_updates = flat_updates * transmit_scales[:, None]
+                agg_clip = None
+            delta_hat, energy, _ = aggregate(
+                agg_updates, idx, gains, beta, ks[4], d=d, sigma0=sigma0,
                 r=r, unbiased_rescale=cfg.unbiased_rescale,
-                gains_est=gains_est if cfg.channel.csi_error > 0 else None)
+                gains_est=gains_est if cfg.channel.csi_error > 0 else None,
+                clip=agg_clip)
             metrics.update(beta=beta, energy=energy,
                            subcarriers=jnp.asarray(k_used))
-            if cfg.randk_mode == "server_topk":
-                metrics["delta_hat"] = delta_hat
         elif alg == "dp_fedavg":
             delta_hat = aggregation.dp_fedavg_aggregate(
                 flat_updates, cfg.clip, cfg.dp_fedavg_sigma, ks[4], r=r)
@@ -138,7 +158,10 @@ def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
             metrics.update(beta=jnp.asarray(0.0), energy=jnp.asarray(0.0),
                            subcarriers=jnp.asarray(d))
 
-        # ---- error-feedback memory update: e_i <- u_i - A^T A u_i
+        # ---- error-feedback memory update: e_i <- u_i - s_i A^T A u_i,
+        # where s_i is the transmit clip scale — what was actually sent is
+        # the clipped sparsified update, so the clipped-away fraction stays
+        # in the residual memory too
         new_residuals = residuals
         if cfg.error_feedback and residuals is not None:
             if alg == "pfels":
@@ -146,17 +169,83 @@ def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
                     lambda u: randk.sparsify(u, idx, d))(flat_updates)
             else:
                 transmitted = flat_updates
+            if (cfg.transmit_clip is not None
+                    and alg in ("pfels", "wfl_p", "wfl_pdp")):
+                transmitted = transmitted * transmit_scales[:, None]
             new_residuals = residuals.at[sel].set(
                 flat_updates - transmitted)
 
         # ---- server update (line 16)
         flat_params, _ = ravel_pytree(params)
         new_flat = flat_params + delta_hat
+        return unravel(new_flat), metrics, new_residuals, delta_hat
+
+    return round_core
+
+
+def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
+                  unravel: Callable):
+    """Builds the jitted single-round function.
+
+    loss_fn(params, {"x","y"}) -> (loss, aux). d = flat dim; unravel maps a
+    flat (d,) vector back to the params pytree. Returns
+    ``(params, metrics)`` or, with ``cfg.error_feedback``,
+    ``(params, metrics, residuals)``.
+    """
+    core = _build_round_core(cfg, loss_fn, d, unravel)
+
+    def round_fn(params, power_limits, data_x, data_y, key,
+                 residuals=None, prev_delta=None):
+        new_params, metrics, new_residuals, delta_hat = core(
+            params, power_limits, data_x, data_y, key, residuals,
+            prev_delta)
+        if (cfg.randk_mode == "server_topk"
+                and cfg.algorithm in ("pfels", "wfl_p", "wfl_pdp")):
+            metrics["delta_hat"] = delta_hat  # seed-era consumer contract
         if cfg.error_feedback:
-            return unravel(new_flat), metrics, new_residuals
-        return unravel(new_flat), metrics
+            return new_params, metrics, new_residuals
+        return new_params, metrics
 
     return jax.jit(round_fn)
+
+
+def make_training_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
+                     unravel: Callable, rounds: int = None):
+    """Builds a jitted T-round driver: one ``lax.scan`` over rounds in a
+    single compiled program, carrying ``(params, residuals, prev_delta)``
+    state — long simulations stop paying per-round dispatch/retrace
+    overhead.
+
+    Returns ``training_fn(params, power_limits, data_x, data_y, key,
+    residuals=None, prev_delta=None) -> (params_T, metrics_T, residuals_T,
+    delta_T)`` where every ``metrics_T`` leaf is stacked over the T rounds
+    (leading axis T) and ``delta_T`` is the last round's reconstructed
+    update — feed it (and ``residuals_T``) back in to resume chunked
+    training without resetting the server_topk support or the
+    error-feedback memory. ``rounds`` defaults to ``cfg.rounds``.
+    """
+    t_rounds = cfg.rounds if rounds is None else rounds
+    core = _build_round_core(cfg, loss_fn, d, unravel)
+
+    def training_fn(params, power_limits, data_x, data_y, key,
+                    residuals=None, prev_delta=None):
+        if cfg.error_feedback and residuals is None:
+            residuals = jnp.zeros((cfg.num_clients, d), jnp.float32)
+        if prev_delta is None:
+            prev_delta = jnp.zeros((d,), jnp.float32)
+
+        def body(carry, round_key):
+            p, res, prev = carry
+            p2, metrics, res2, delta_hat = core(
+                p, power_limits, data_x, data_y, round_key, res, prev)
+            return (p2, res2, delta_hat), metrics
+
+        keys = jax.random.split(key, t_rounds)
+        (p_final, res_final, delta_final), metrics = jax.lax.scan(
+            body, (params, residuals, prev_delta), keys)
+        return p_final, metrics, res_final, delta_final
+
+    return jax.jit(training_fn)
 
 
 def round_epsilon_spent(cfg: PFELSConfig, beta: float) -> float:

@@ -1,4 +1,7 @@
 # TPU Pallas kernels for the paper's compute hot-spots:
+#   pfels_transmit   — FUSED clip -> rand_k -> power scale -> noisy AirComp
+#                      sum for the whole (r, d) batch (Alg. 2 lines 12-15),
+#                      one pass over d-tiles, no (r, d) intermediates
 #   randk_gather     — A^t Delta + beta-scale (client transmit path)
 #   aircomp_combine  — (A^t)^T y / (r beta) scatter + unscale (server path)
 #   clip_norm        — fused two-pass l2 clip (Assumption 1)

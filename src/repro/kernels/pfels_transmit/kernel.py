@@ -1,0 +1,110 @@
+"""Pallas TPU kernels: fused PFELS transmit pipeline (Alg. 2 lines 12-15).
+
+The whole (r, d) client-update batch goes through clip -> rand_k select ->
+Theorem-5 power scale -> noisy AirComp sum in one pass over column tiles of
+d, never materializing an (r, d)-sized sparsified/scaled intermediate.
+
+The rand_k gather is reformulated as a dense 0/1 mask over d (computed once
+server-side, O(d) not O(r d)), which removes all data-dependent indexing
+from the kernel: each grid step loads an (r, block) tile of the updates,
+masks it, reduces over clients with the per-client receive coefficients
+(VPU multiply + sublane reduction; an MXU matvec at large r), adds the
+pre-scattered channel noise, and accumulates the transmit energy
+sum_i tx_i^2 ||m * Delta_i||^2 into a (1, 1) output across the sequential
+TPU grid (the same cross-step reduction idiom as clip_norm).
+
+Two passes, like clip_norm: pass 1 (optional, only when a transmit clip is
+set) accumulates per-client squared norms over the full d; the host turns
+them into clip scales and per-client coefficients; pass 2 does the fused
+combine.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _sumsq_kernel(u_ref, out_ref):
+    """Accumulate per-client sum of squares across column tiles.
+    u_ref: (r, block) VMEM; out_ref: (r, 1) revisited every step."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    u = u_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.sum(u * u, axis=1, keepdims=True)
+
+
+def _combine_kernel(rx_ref, txsq_ref, u_ref, m_ref, z_ref, y_ref, e_ref):
+    """One fused tile: mask, client-weighted superposition, noise, energy.
+
+    rx_ref/txsq_ref: (r, 1) VMEM, revisited every step; u_ref: (r, block);
+    m_ref/z_ref/y_ref: (1, block); e_ref: (1, 1) accumulated across steps.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        e_ref[0, 0] = jnp.zeros((), jnp.float32)
+
+    um = u_ref[...].astype(jnp.float32) * m_ref[...].astype(jnp.float32)
+    y_ref[...] = (jnp.sum(um * rx_ref[...], axis=0, keepdims=True)
+                  + z_ref[...]).astype(y_ref.dtype)
+    e_ref[0, 0] += jnp.sum(txsq_ref[...]
+                           * jnp.sum(um * um, axis=1, keepdims=True))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def client_sumsq(updates: jnp.ndarray, *, block: int = 4096,
+                 interpret: bool = True) -> jnp.ndarray:
+    """updates: (r, d_pad) with d_pad % block == 0. Returns (r, 1) f32
+    per-client squared l2 norms (zero-padding is norm-neutral)."""
+    r, d_pad = updates.shape
+    grid = (d_pad // block,)
+    return pl.pallas_call(
+        _sumsq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((r, block), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((r, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), jnp.float32),
+        interpret=interpret,
+    )(updates)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def fused_combine(updates: jnp.ndarray, mask: jnp.ndarray,
+                  noise_dense: jnp.ndarray, rx_coeffs: jnp.ndarray,
+                  tx_sq: jnp.ndarray, *, block: int = 4096,
+                  interpret: bool = True):
+    """updates: (r, d_pad); mask/noise_dense: (1, d_pad); rx_coeffs/tx_sq:
+    (r, 1). d_pad % block == 0. Returns (y_dense (1, d_pad), energy (1, 1)).
+    """
+    r, d_pad = updates.shape
+    grid = (d_pad // block,)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r, 1), lambda i: (0, 0)),
+            pl.BlockSpec((r, 1), lambda i: (0, 0)),
+            pl.BlockSpec((r, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(rx_coeffs, tx_sq, updates, mask, noise_dense)

@@ -1,0 +1,85 @@
+"""jit-compatible wrapper: the fused PFELS transmit pipeline.
+
+``fused_transmit`` has the same contract as
+``core.aggregation.aircomp_aggregate`` — same PRNG key => bit-identical
+channel-noise draw — plus the optional per-client transmit clip. It pads d
+up to a whole number of column tiles (zero pads are mask-annihilated, so
+they change nothing), runs the one-or-two Pallas passes, and finishes with
+the O(d) server-side unscale. ``interpret=None`` (default) picks the real
+compiled kernel on TPU and the Pallas interpreter everywhere else; pass an
+explicit bool to override.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pfels_transmit import ref
+from repro.kernels.pfels_transmit.kernel import (LANES, client_sumsq,
+                                                 fused_combine)
+
+
+def _pad_cols(x: jnp.ndarray, d_pad: int) -> jnp.ndarray:
+    pad = d_pad - x.shape[-1]
+    return jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+
+
+def fused_transmit(updates_flat: jnp.ndarray, idx: jnp.ndarray,
+                   gains: jnp.ndarray, beta, noise_key, *, d: int,
+                   sigma0: float, r: int, clip: Optional[float] = None,
+                   gains_est=None, unbiased_rescale: bool = False,
+                   use_kernel: bool = True,
+                   interpret: Optional[bool] = None,
+                   block: int = 4096):
+    """Fused Alg. 2 lines 12-16 for the whole (r, d) update batch.
+
+    updates_flat: (r, d); idx: (k,) rand_k subset; gains: (r,) |h_i|;
+    clip: optional per-client l2 cap C on the transmitted update
+    (s_i = min(1, C/||Delta_i||), applied before power scaling).
+
+    Returns (delta_hat (d,), energy, y (k,)) exactly like
+    ``aircomp_aggregate``.
+    """
+    if interpret is None:   # compiled kernel on TPU, interpreter elsewhere
+        interpret = jax.default_backend() != "tpu"
+    k = idx.shape[0]
+    n_clients = updates_flat.shape[0]
+    noise = sigma0 * jax.random.normal(noise_key, (k,))
+    mask = jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
+    z_dense = jnp.zeros((d,), jnp.float32).at[idx].set(noise)
+    u = updates_flat.astype(jnp.float32)
+
+    if use_kernel:
+        # pick the tile count first, then round the per-tile width up to a
+        # whole number of lanes — pads at most one lane-multiple per tile
+        # instead of up to a whole `block` of dead columns (d=4100 with a
+        # fixed 4096 block would otherwise process 2x the columns)
+        n_tiles = max(1, -(-d // block))
+        blk = -(-(-(-d // n_tiles)) // LANES) * LANES
+        d_pad = n_tiles * blk
+        u_pad = _pad_cols(u, d_pad)
+        if clip is not None:
+            sumsq = client_sumsq(u_pad, block=blk, interpret=interpret)
+            scales = ref.scales_from_norms(jnp.sqrt(sumsq[:, 0]), clip)
+        else:
+            scales = jnp.ones((n_clients,), jnp.float32)
+        tx, rx = ref.transmit_coeffs(gains, beta, scales, gains_est)
+        y2d, e2d = fused_combine(
+            u_pad, _pad_cols(mask[None, :], d_pad),
+            _pad_cols(z_dense[None, :], d_pad),
+            rx.astype(jnp.float32)[:, None],
+            (tx.astype(jnp.float32) ** 2)[:, None],
+            block=blk, interpret=interpret)
+        y_dense, energy = y2d[0, :d], e2d[0, 0]
+    else:
+        scales = ref.clip_scales(u, clip)
+        tx, rx = ref.transmit_coeffs(gains, beta, scales, gains_est)
+        y_dense, energy = ref.pfels_transmit_ref(u, mask, z_dense, rx,
+                                                 tx ** 2)
+
+    delta_hat = y_dense / (r * beta)
+    if unbiased_rescale:
+        delta_hat = delta_hat * (d / k)
+    return delta_hat, energy, y_dense[idx]

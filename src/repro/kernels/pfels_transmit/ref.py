@@ -1,0 +1,73 @@
+"""Oracle for the fused PFELS transmit pipeline (Alg. 2 lines 12-15).
+
+The whole client-side transmit chain for the (r, d) update batch in one
+place: per-client l2 clip -> rand_k selection (dense 0/1 mask over d) ->
+Theorem-5 power scaling beta/|h_i| -> MAC superposition with the true gains
+-> receiver noise on the selected subcarriers. Unlike the Pallas kernel this
+reference is free to materialize (r, d) intermediates — it is the parity
+oracle, not the fast path.
+
+Dense-mask formulation: with m the 0/1 indicator of omega and z_dense the
+noise scattered onto omega,
+    y_dense = sum_i |h_i| (beta/|h_i^est|) s_i (m * Delta_i) + z_dense
+where s_i = min(1, C/||Delta_i||) is the optional transmit clip. y_dense is
+zero off omega, so Delta_hat = y_dense/(r beta) directly; the k-subcarrier
+payload is y_dense[omega].
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def scales_from_norms(norms: jnp.ndarray, clip: float) -> jnp.ndarray:
+    """s = min(1, C/||.||) with the shared zero-norm guard — the single
+    definition of the clip scale used by the fused kernel path, the fused
+    reference, and the unfused aircomp_aggregate (parity depends on all
+    three agreeing, epsilon included)."""
+    return jnp.minimum(1.0, clip / jnp.maximum(norms, 1e-12))
+
+
+def clip_scales(updates: jnp.ndarray, clip: Optional[float]) -> jnp.ndarray:
+    """Per-client s_i = min(1, C/||Delta_i||_2) over the FULL update (the
+    norm bound of Assumption 1 covers every coordinate, not just omega).
+    clip=None disables (s_i = 1)."""
+    if clip is None:
+        return jnp.ones((updates.shape[0],), jnp.float32)
+    return scales_from_norms(jnp.linalg.norm(updates.astype(jnp.float32),
+                                             axis=1), clip)
+
+
+def transmit_coeffs(gains, beta, scales, gains_est=None):
+    """(tx, rx): tx_i = (beta/|h_i^est|) s_i is the per-client transmit
+    amplitude; rx_i = |h_i| tx_i is the coefficient the MAC applies to
+    Delta_i at the receiver (perfect CSI: rx_i = beta s_i)."""
+    comp = gains_est if gains_est is not None else gains
+    tx = (beta / comp) * scales
+    return tx, gains * tx
+
+
+def pfels_transmit_ref(updates: jnp.ndarray, mask: jnp.ndarray,
+                       noise_dense: jnp.ndarray, rx_coeffs: jnp.ndarray,
+                       tx_sq: jnp.ndarray):
+    """Fused combine, dense formulation (the part the Pallas kernel fuses).
+
+    updates: (r, d); mask: (d,) 0/1 indicator of omega; noise_dense: (d,)
+    channel noise scattered onto omega; rx_coeffs: (r,) receive-side
+    per-client coefficients; tx_sq: (r,) squared transmit amplitudes.
+
+    Returns (y_dense (d,), energy scalar):
+        y_dense = sum_i rx_i (m * Delta_i) + z_dense
+        energy  = sum_i tx_i^2 ||m * Delta_i||^2      (= sum_i ||x_i||^2)
+    """
+    masked = updates.astype(jnp.float32) * mask[None, :]
+    y_dense = jnp.einsum("rd,r->d", masked, rx_coeffs) + noise_dense
+    energy = jnp.sum(tx_sq * jnp.sum(masked * masked, axis=1))
+    return y_dense, energy
+
+
+def client_sumsq_ref(updates: jnp.ndarray) -> jnp.ndarray:
+    """Per-client squared l2 norms, (r,) — pass 1 of the clip."""
+    u = updates.astype(jnp.float32)
+    return jnp.sum(u * u, axis=1)

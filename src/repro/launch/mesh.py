@@ -2,10 +2,40 @@
 state; call the functions."""
 from __future__ import annotations
 
+import enum
+
 import numpy as np
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 has explicit mesh axis types
+    from jax.sharding import AxisType
+    _HAS_AXIS_TYPES = True
+except ImportError:  # jax 0.4.x: every axis is implicitly Auto
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+    _HAS_AXIS_TYPES = False
+
+
+def use_mesh(mesh: Mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` on jax >= 0.6,
+    the ``with mesh:`` global-mesh context on 0.4.x (where pjit resolves
+    unspecified shardings against the thread-local physical mesh)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def make_mesh(devices: np.ndarray, axes) -> Mesh:
+    """Mesh with Auto axis types where the pinned jax supports them, plain
+    Mesh otherwise (pre-0.5 Mesh has no ``axis_types`` kwarg and treats all
+    axes as Auto anyway)."""
+    if _HAS_AXIS_TYPES:
+        return Mesh(devices, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -20,11 +50,11 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             f"need {n} devices for mesh {shape}, have {len(devices)}; "
             "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
     dev = np.array(devices[:n]).reshape(shape)
-    return Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(dev, axes)
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
     """Small mesh over however many (host) devices exist — smoke tests."""
     n = int(np.prod(shape))
     dev = np.array(jax.devices()[:n]).reshape(shape)
-    return Mesh(dev, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(dev, axes)

@@ -45,6 +45,7 @@ def test_all_algorithms_run(problem, alg):
         assert int(m["subcarriers"]) in (d,)
 
 
+@pytest.mark.slow
 def test_pfels_learns(problem):
     params, d, unravel, (x, y, xt, yt), loss_fn = problem
     cfg = PFELSConfig(num_clients=30, clients_per_round=8, local_steps=5,

@@ -1,0 +1,325 @@
+"""Fused PFELS transmit pipeline: Pallas kernel == ref.py == the unfused
+aircomp_aggregate path (same PRNG key => bit-identical noise draw), across
+odd d, k=1, k=d, r=1 edge cases; plus the round-level wiring behind
+cfg.use_fused_kernel and the lax.scan multi-round driver."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.configs import PFELSConfig
+from repro.configs.paper_models import BENCH_MLP
+from repro.core import aggregation, randk
+from repro.data import make_federated_classification
+from repro.fl import make_round_fn, make_training_fn, setup
+from repro.kernels.pfels_transmit import ref as tref
+from repro.kernels.pfels_transmit.ops import fused_transmit
+from repro.models import cnn
+
+CASES = [
+    (3, 40, 10),     # generic
+    (1, 37, 1),      # r=1, odd d, k=1
+    (4, 37, 37),     # k=d, odd d
+    (2, 128, 64),    # lane-aligned d
+    (5, 301, 17),    # odd everything
+]
+
+
+def _problem(r, d, k, seed=0):
+    key = jax.random.PRNGKey(seed)
+    updates = jax.random.normal(key, (r, d))
+    gains = (jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (r,)))
+             * 0.05 + 0.01)
+    idx = randk.sample_indices(jax.random.fold_in(key, 2), d, k)
+    noise_key = jax.random.fold_in(key, 3)
+    return updates, gains, idx, noise_key
+
+
+@pytest.mark.parametrize("r,d,k", CASES)
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jax_ref"])
+def test_fused_matches_unfused(r, d, k, use_kernel):
+    updates, gains, idx, nk = _problem(r, d, k)
+    beta, sigma0 = 0.7, 0.3
+    dh0, e0, y0 = aggregation.aircomp_aggregate(
+        updates, idx, gains, beta, nk, d=d, sigma0=sigma0, r=r)
+    dh1, e1, y1 = fused_transmit(
+        updates, idx, gains, beta, nk, d=d, sigma0=sigma0, r=r,
+        use_kernel=use_kernel)
+    np.testing.assert_allclose(dh1, dh0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e1, e0, rtol=1e-5)
+    np.testing.assert_allclose(y1, y0, rtol=1e-5, atol=1e-6)
+
+
+def test_noise_draw_bit_identical():
+    """Same PRNG key => the fused path consumes the exact same channel-noise
+    realization as the unfused path: with the superposition zeroed out
+    (zero updates) the received payloads agree bit-for-bit."""
+    r, d, k = 3, 64, 16
+    _, gains, idx, nk = _problem(r, d, k)
+    zeros = jnp.zeros((r, d))
+    _, _, y0 = aggregation.aircomp_aggregate(
+        zeros, idx, gains, 1.0, nk, d=d, sigma0=0.9, r=r)
+    for use_kernel in (True, False):
+        _, _, y1 = fused_transmit(zeros, idx, gains, 1.0, nk, d=d,
+                                  sigma0=0.9, r=r, use_kernel=use_kernel)
+        assert bool(jnp.all(y0 == y1))
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jax_ref"])
+def test_fused_clip_matches_preclipped_unfused(use_kernel):
+    """transmit_clip == pre-clipping the updates then running unfused."""
+    r, d, k = 4, 50, 20
+    updates, gains, idx, nk = _problem(r, d, k, seed=7)
+    updates = 3.0 * updates
+    clip, beta, sigma0 = 1.5, 0.9, 0.2
+    norms = jnp.linalg.norm(updates, axis=1, keepdims=True)
+    pre = updates * jnp.minimum(1.0, clip / norms)
+    dh0, e0, y0 = aggregation.aircomp_aggregate(
+        pre, idx, gains, beta, nk, d=d, sigma0=sigma0, r=r)
+    dh1, e1, y1 = fused_transmit(
+        updates, idx, gains, beta, nk, d=d, sigma0=sigma0, r=r, clip=clip,
+        use_kernel=use_kernel)
+    np.testing.assert_allclose(dh1, dh0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e1, e0, rtol=1e-5)
+    np.testing.assert_allclose(y1, y0, rtol=1e-5, atol=1e-6)
+
+
+def test_unfused_clip_arg_matches_manual():
+    """The new clip= arg on aircomp_aggregate == manual pre-clip."""
+    r, d, k = 3, 30, 9
+    updates, gains, idx, nk = _problem(r, d, k, seed=9)
+    updates = 5.0 * updates
+    norms = jnp.linalg.norm(updates, axis=1, keepdims=True)
+    pre = updates * jnp.minimum(1.0, 2.0 / norms)
+    a = aggregation.aircomp_aggregate(pre, idx, gains, 1.1, nk, d=d,
+                                      sigma0=0.1, r=r)
+    b = aggregation.aircomp_aggregate(updates, idx, gains, 1.1, nk, d=d,
+                                      sigma0=0.1, r=r, clip=2.0)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(y, x, rtol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jax_ref"])
+def test_fused_imperfect_csi_and_rescale(use_kernel):
+    """gains_est precompensation and unbiased_rescale flow through fused."""
+    r, d, k = 4, 45, 15
+    updates, gains, idx, nk = _problem(r, d, k, seed=3)
+    gains_est = gains * 1.07
+    kw = dict(d=d, sigma0=0.25, r=r, gains_est=gains_est,
+              unbiased_rescale=True)
+    dh0, e0, y0 = aggregation.aircomp_aggregate(
+        updates, idx, gains, 0.8, nk, **kw)
+    dh1, e1, y1 = fused_transmit(updates, idx, gains, 0.8, nk,
+                                 use_kernel=use_kernel, **kw)
+    np.testing.assert_allclose(dh1, dh0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e1, e0, rtol=1e-5)
+    np.testing.assert_allclose(y1, y0, rtol=1e-5, atol=1e-6)
+
+
+def test_client_sumsq_kernel_matches_ref():
+    """Pass-1 Pallas reduction == the ref.py sumsq oracle (zero column
+    padding is norm-neutral)."""
+    from repro.kernels.pfels_transmit.kernel import client_sumsq
+    r, d = 5, 300
+    u = jax.random.normal(jax.random.PRNGKey(13), (r, d))
+    u_pad = jnp.pad(u, ((0, 0), (0, 512 - d)))
+    out = client_sumsq(u_pad, block=128, interpret=True)
+    np.testing.assert_allclose(out[:, 0], tref.client_sumsq_ref(u),
+                               rtol=1e-6)
+
+
+def test_kernel_matches_ref_module():
+    """Pallas kernel == the ref.py oracle on the dense formulation."""
+    r, d = 3, 200
+    key = jax.random.PRNGKey(11)
+    u = jax.random.normal(key, (r, d))
+    idx = randk.sample_indices(key, d, 60)
+    mask = jnp.zeros((d,)).at[idx].set(1.0)
+    z = jnp.zeros((d,)).at[idx].set(0.1)
+    scales = tref.clip_scales(u, 1.0)
+    tx, rx = tref.transmit_coeffs(jnp.full((r,), 0.05), 0.9, scales)
+    y_ref, e_ref = tref.pfels_transmit_ref(u, mask, z, rx, tx ** 2)
+    dh_k, e_k, _ = fused_transmit(u, idx, jnp.full((r,), 0.05), 0.9,
+                                  jax.random.PRNGKey(0), d=d, sigma0=0.0,
+                                  r=r, clip=1.0, use_kernel=True)
+    # sigma0=0 => z contribution differs; compare the noiseless parts
+    dh_ref = (y_ref - z) / (r * 0.9)
+    np.testing.assert_allclose(dh_k, dh_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e_k, e_ref, rtol=1e-5)
+
+
+# ------------------------------------------------------- round-level wiring
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_cnn(key, BENCH_MLP)
+    flat, unravel = ravel_pytree(params)
+    x, y, xt, yt = make_federated_classification(
+        key, n_clients=30, per_client=30, num_classes=10,
+        image_shape=(1, 8, 8))
+    loss_fn = lambda p, b: cnn.cnn_loss(p, BENCH_MLP, b)
+    return params, flat.shape[0], unravel, (x, y), loss_fn
+
+
+def test_round_fused_flag_parity(problem):
+    """make_round_fn(use_fused_kernel=True) == the unfused round, same key."""
+    params, d, unravel, (x, y), loss_fn = problem
+    outs = []
+    for fused in (False, True):
+        cfg = PFELSConfig(num_clients=30, clients_per_round=4,
+                          local_steps=3, rounds=1, use_fused_kernel=fused)
+        st = setup(jax.random.PRNGKey(1), params, cfg, d)
+        fn = make_round_fn(cfg, loss_fn, d, unravel)
+        outs.append(fn(params, st.power_limits, x, y, jax.random.PRNGKey(2)))
+    (p0, m0), (p1, m1) = outs
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(p1)):
+        np.testing.assert_allclose(b, a, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(m1["energy"], m0["energy"], rtol=1e-5)
+    np.testing.assert_allclose(m1["beta"], m0["beta"], rtol=1e-6)
+
+
+def test_training_fn_matches_python_loop(problem):
+    """The lax.scan driver reproduces T sequential make_round_fn calls when
+    fed the same per-round keys."""
+    params, d, unravel, (x, y), loss_fn = problem
+    cfg = PFELSConfig(num_clients=30, clients_per_round=4, local_steps=2,
+                      rounds=3)
+    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+    T = 3
+    tf = make_training_fn(cfg, loss_fn, d, unravel, rounds=T)
+    pT, ms, _, _ = tf(params, st.power_limits, x, y, jax.random.PRNGKey(7))
+    fn = make_round_fn(cfg, loss_fn, d, unravel)
+    keys = jax.random.split(jax.random.PRNGKey(7), T)
+    p = params
+    loop_losses = []
+    for t in range(T):
+        p, m = fn(p, st.power_limits, x, y, keys[t])
+        loop_losses.append(float(m["train_loss"]))
+    for a, b in zip(jax.tree.leaves(pT), jax.tree.leaves(p)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    assert ms["train_loss"].shape == (T,)
+    np.testing.assert_allclose(np.asarray(ms["train_loss"]), loop_losses,
+                               rtol=1e-5)
+
+
+def test_training_fn_error_feedback_carries_residuals(problem):
+    params, d, unravel, (x, y), loss_fn = problem
+    cfg = PFELSConfig(num_clients=30, clients_per_round=4, local_steps=2,
+                      rounds=2, error_feedback=True)
+    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+    tf = make_training_fn(cfg, loss_fn, d, unravel, rounds=2)
+    pT, ms, res, _ = tf(params, st.power_limits, x, y, jax.random.PRNGKey(8))
+    assert res.shape == (30, d)
+    assert float(jnp.sum(jnp.abs(res))) > 0        # memory accumulated
+    assert not bool(jnp.any(jnp.isnan(res)))
+
+
+@pytest.mark.parametrize("alg", ["wfl_p", "dp_fedavg", "fedavg"])
+def test_training_fn_baselines_run(problem, alg):
+    params, d, unravel, (x, y), loss_fn = problem
+    cfg = PFELSConfig(num_clients=30, clients_per_round=4, local_steps=2,
+                      rounds=2, algorithm=alg)
+    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+    tf = make_training_fn(cfg, loss_fn, d, unravel, rounds=2)
+    pT, ms, _, _ = tf(params, st.power_limits, x, y, jax.random.PRNGKey(4))
+    assert bool(jnp.all(jnp.isfinite(ms["train_loss"])))
+    assert not any(bool(jnp.any(jnp.isnan(l))) for l in jax.tree.leaves(pT))
+
+
+def test_training_fn_fused_server_topk(problem):
+    """server_topk carries delta_hat through the scan; fused path works."""
+    params, d, unravel, (x, y), loss_fn = problem
+    cfg = PFELSConfig(num_clients=30, clients_per_round=4, local_steps=2,
+                      rounds=3, randk_mode="server_topk",
+                      use_fused_kernel=True)
+    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+    tf = make_training_fn(cfg, loss_fn, d, unravel, rounds=3)
+    pT, ms, _, _ = tf(params, st.power_limits, x, y, jax.random.PRNGKey(5))
+    assert bool(jnp.all(jnp.isfinite(ms["train_loss"])))
+
+
+def test_error_feedback_retains_clipped_mass(problem):
+    """With transmit_clip ~ 0 nothing is actually transmitted, so the
+    error-feedback residual must keep (almost) the whole update — on-idx
+    coordinates included — rather than treating the unclipped on-idx mass
+    as sent."""
+    params, d, unravel, (x, y), loss_fn = problem
+    outs = {}
+    for clip in (None, 1e-9):
+        cfg = PFELSConfig(num_clients=30, clients_per_round=4,
+                          local_steps=3, rounds=1, error_feedback=True,
+                          transmit_clip=clip)
+        st = setup(jax.random.PRNGKey(1), params, cfg, d)
+        fn = make_round_fn(cfg, loss_fn, d, unravel)
+        _, _, res = fn(params, st.power_limits, x, y,
+                       jax.random.PRNGKey(2),
+                       residuals=jnp.zeros((30, d), jnp.float32))
+        outs[clip] = float(jnp.linalg.norm(res))
+    # clipped-to-zero transmission leaves strictly more in the memory than
+    # the unclipped round (which really did send the on-idx mass)
+    assert outs[1e-9] > outs[None] * 1.1, outs
+
+
+def test_training_fn_server_topk_cold_start_is_uniform(problem):
+    """Round 1 of a cold scan (zero prev_delta) must equal a cold
+    make_round_fn call (prev_delta=None) bit-for-bit: top_k over |zeros|
+    would otherwise deterministically bias the support to coords 0..k/2."""
+    params, d, unravel, (x, y), loss_fn = problem
+    cfg = PFELSConfig(num_clients=30, clients_per_round=4, local_steps=2,
+                      rounds=1, randk_mode="server_topk")
+    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+    tf = make_training_fn(cfg, loss_fn, d, unravel, rounds=1)
+    p_scan, _, _, _ = tf(params, st.power_limits, x, y,
+                         jax.random.PRNGKey(3))
+    fn = make_round_fn(cfg, loss_fn, d, unravel)
+    k0 = jax.random.split(jax.random.PRNGKey(3), 1)[0]
+    p_cold, _ = fn(params, st.power_limits, x, y, k0)
+    for a, b in zip(jax.tree.leaves(p_scan), jax.tree.leaves(p_cold)):
+        assert bool(jnp.all(a == b))
+
+
+def test_training_fn_stateful_scan_matches_loop_and_resumes(problem):
+    """With server_topk + error feedback: (a) the scan == a python loop
+    over make_round_fn threading (residuals, delta_hat) with the same
+    keys and the same zero-initialized state; (b) prev_delta= actually
+    changes the resumed trajectory (the carried state is consumed, so
+    chunked training does not silently reset the top-k support)."""
+    params, d, unravel, (x, y), loss_fn = problem
+    cfg = PFELSConfig(num_clients=30, clients_per_round=4, local_steps=2,
+                      rounds=4, randk_mode="server_topk",
+                      error_feedback=True)
+    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+
+    tf4 = make_training_fn(cfg, loss_fn, d, unravel, rounds=4)
+    p_full, _, res_full, dh_full = tf4(params, st.power_limits, x, y,
+                                       jax.random.PRNGKey(6))
+
+    fn = make_round_fn(cfg, loss_fn, d, unravel)
+    keys = jax.random.split(jax.random.PRNGKey(6), 4)
+    p = params
+    res = jnp.zeros((cfg.num_clients, d), jnp.float32)
+    dh = jnp.zeros((d,), jnp.float32)
+    for t in range(4):
+        p, m, res = fn(p, st.power_limits, x, y, keys[t],
+                       residuals=res, prev_delta=dh)
+        dh = m["delta_hat"]
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dh_full, dh, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(res_full, res, rtol=1e-5, atol=1e-6)
+
+    # (b) resuming with the carried delta differs from a cold restart
+    tf2 = make_training_fn(cfg, loss_fn, d, unravel, rounds=2)
+    warm, _, _, _ = tf2(p_full, st.power_limits, x, y,
+                        jax.random.PRNGKey(8), residuals=res_full,
+                        prev_delta=dh_full)
+    cold, _, _, _ = tf2(p_full, st.power_limits, x, y,
+                        jax.random.PRNGKey(8), residuals=res_full)
+    diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+               zip(jax.tree.leaves(warm), jax.tree.leaves(cold)))
+    assert diff > 0.0  # top-k support came from dh_full, not zeros

@@ -109,3 +109,57 @@ def test_zcdp_composition_tighter_than_basic():
 def test_pfels_noise_multiplier():
     z = privacy.pfels_noise_multiplier(2.0, 0.05, 5, 1.0, 1.0)
     assert z == pytest.approx(1.0 / (2.0 * 0.05 * 5))
+
+
+# ------------------------------------------------------- property tests
+# parametrized grids instead of hypothesis (not in the pinned environment)
+
+_BASE = dict(eta=0.05, tau=5, c1=1.0, r=32, n=1000, delta=1e-3, sigma0=1.0)
+
+
+@pytest.mark.parametrize("eps", [0.1, 0.5, 1.5, 4.0, 10.0])
+@pytest.mark.parametrize("scale", [0.5, 1.0, 3.0])
+def test_property_round_epsilon_roundtrip(eps, scale):
+    """round_epsilon(beta_privacy_cap(eps)) == eps for any C2 > 0."""
+    kw = dict(_BASE, eta=_BASE["eta"] * scale)
+    beta = privacy.beta_privacy_cap(eps, **kw)
+    assert privacy.round_epsilon(beta, **kw) == pytest.approx(eps, rel=1e-9)
+
+
+@pytest.mark.parametrize("field,values", [
+    ("eta", [0.01, 0.05, 0.1, 0.5]),
+    ("tau", [1, 2, 5, 20]),
+    ("c1", [0.1, 0.5, 1.0, 4.0]),
+    ("r", [1, 8, 32, 200]),
+])
+def test_property_c2_monotone(field, values):
+    """C2 is strictly increasing in eta, tau, C1 and r (Eq. 21): a larger
+    sensitivity or sampling fraction costs more privacy per unit beta."""
+    c2s = [privacy.c2_coefficient(**dict(_BASE, **{field: v}))
+           for v in values]
+    assert all(b > a for a, b in zip(c2s, c2s[1:])), (field, c2s)
+
+
+@pytest.mark.parametrize("eps_round", [0.01, 0.1, 0.5])
+@pytest.mark.parametrize("rounds", [1, 10, 500])
+def test_property_advanced_composition_dominates_single_round(eps_round,
+                                                              rounds):
+    """T-fold advanced composition never reports less than one round."""
+    eps_t, delta_t = privacy.compose_advanced(eps_round, 1e-6, rounds)
+    assert eps_t >= eps_round - 1e-12
+    assert delta_t >= 1e-6
+    # and is monotone in T
+    eps_t2, _ = privacy.compose_advanced(eps_round, 1e-6, rounds + 1)
+    assert eps_t2 > eps_t
+
+
+@pytest.mark.parametrize("z", [0.5, 1.0, 2.0, 8.0])
+@pytest.mark.parametrize("rounds", [1, 100, 5000])
+def test_property_zcdp_finite_positive(z, rounds):
+    """compose_zcdp is finite and positive for any valid noise multiplier,
+    infinite only at z <= 0."""
+    eps, delta = privacy.compose_zcdp(z, rounds, 1e-5)
+    assert math.isfinite(eps) and eps > 0
+    assert delta == 1e-5
+    bad, _ = privacy.compose_zcdp(0.0, rounds, 1e-5)
+    assert bad == float("inf")

@@ -3,8 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import make_mesh
 from repro.models.attention import kv_cache_spec
 from repro.sharding.rules import exclude_axes, resolve_spec
 
@@ -12,7 +13,7 @@ from repro.sharding.rules import exclude_axes, resolve_spec
 @pytest.fixture
 def mesh():
     dev = np.array(jax.devices()[:1]).reshape(1, 1)
-    return Mesh(dev, ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+    return make_mesh(dev, ("data", "model"))
 
 
 def test_resolve_divisible(mesh):
