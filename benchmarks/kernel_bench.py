@@ -3,8 +3,19 @@
 Wall-times on CPU are NOT the perf claim (interpret mode runs the kernel
 body in Python); this benchmark validates the call path and records the
 oracle cost — the TPU perf story lives in the roofline analysis.
+
+Forces an 8-device host platform (before jax initializes) so the sharded
+cohort round (round_sharded vs round_vmapped rows) actually splits over
+devices on CPU.
 """
 from __future__ import annotations
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8")
 
 import time
 
@@ -45,15 +56,14 @@ def bench_pfels_transmit(key, rows, *, r=16, d=128 * 512):
         rows.append((f"pfels_transmit_{tag}", us, f"r={r},d={d},k={k}"))
 
 
-def bench_round_drivers(rows, *, t_rounds=8):
-    """T rounds: python loop over the jitted round_fn (one dispatch per
-    round) vs one lax.scan-compiled program (make_training_fn)."""
+def _fl_problem(cfg):
+    """One shared FL benchmark problem (BENCH_MLP on synthetic federated
+    data) so every round-driver row measures the same thing."""
     from jax.flatten_util import ravel_pytree
 
-    from repro.configs import PFELSConfig
     from repro.configs.paper_models import BENCH_MLP
     from repro.data import make_federated_classification
-    from repro.fl import make_round_fn, make_training_fn, setup
+    from repro.fl import setup
     from repro.models import cnn
 
     key = jax.random.PRNGKey(0)
@@ -64,9 +74,19 @@ def bench_round_drivers(rows, *, t_rounds=8):
         key, n_clients=30, per_client=30, num_classes=10,
         image_shape=(1, 8, 8))
     loss_fn = lambda p, b: cnn.cnn_loss(p, BENCH_MLP, b)
+    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+    return params, d, unravel, (x, y), loss_fn, st
+
+
+def bench_round_drivers(rows, *, t_rounds=8):
+    """T rounds: python loop over the jitted round_fn (one dispatch per
+    round) vs one lax.scan-compiled program (make_training_fn)."""
+    from repro.configs import PFELSConfig
+    from repro.fl import make_round_fn, make_training_fn
+
     cfg = PFELSConfig(num_clients=30, clients_per_round=8, local_steps=3,
                       rounds=t_rounds)
-    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+    params, d, unravel, (x, y), loss_fn, st = _fl_problem(cfg)
 
     fn = make_round_fn(cfg, loss_fn, d, unravel)
     keys = jax.random.split(jax.random.PRNGKey(2), t_rounds)
@@ -84,6 +104,33 @@ def bench_round_drivers(rows, *, t_rounds=8):
     us = _time(lambda: tf(params, st.power_limits, x, y,
                           jax.random.PRNGKey(2))[0], reps=3)
     rows.append(("rounds_lax_scan", us, f"T={t_rounds},d={d}"))
+
+
+def bench_sharded_round(rows):
+    """Sharded cohort round (shard_map over ('pod','data'), DESIGN.md §7)
+    vs the vmapped single-device round, same cfg and key."""
+    import dataclasses
+
+    from repro.configs import PFELSConfig
+    from repro.fl import make_round_fn
+    from repro.launch.mesh import make_cohort_mesh
+
+    cfg = PFELSConfig(num_clients=30, clients_per_round=8, local_steps=3)
+    params, d, unravel, (x, y), loss_fn, st = _fl_problem(cfg)
+    mesh = make_cohort_mesh(cfg.clients_per_round)
+    shards = mesh.shape["pod"] * mesh.shape["data"]
+
+    fn_v = make_round_fn(cfg, loss_fn, d, unravel)
+    us = _time(lambda: fn_v(params, st.power_limits, x, y,
+                            jax.random.PRNGKey(2))[0], reps=3)
+    rows.append(("round_vmapped", us, f"r={cfg.clients_per_round},d={d}"))
+
+    cfg_s = dataclasses.replace(cfg, client_sharding="cohort")
+    fn_s = make_round_fn(cfg_s, loss_fn, d, unravel, mesh=mesh)
+    us = _time(lambda: fn_s(params, st.power_limits, x, y,
+                            jax.random.PRNGKey(2))[0], reps=3)
+    rows.append(("round_sharded", us,
+                 f"r={cfg.clients_per_round},d={d},shards={shards}"))
 
 
 def run():
@@ -124,6 +171,7 @@ def run():
 
     bench_pfels_transmit(key, rows)
     bench_round_drivers(rows)
+    bench_sharded_round(rows)
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)

@@ -209,6 +209,13 @@ class PFELSConfig:
     # min(1, C/||Delta_i||) before sparsification, enforcing the Theorem-5
     # premise ||Delta|| <= eta tau C1. None disables.
     transmit_clip: Optional[float] = None
+    # sharded cohort execution (DESIGN.md §7): "cohort" runs the per-client
+    # pipeline under shard_map with the r selected clients partitioned over
+    # the ("pod", "data") mesh axes and the AirComp sum as a cross-device
+    # psum; "none" keeps the vmapped single-device path. The cohort mode
+    # drops back to the vmapped path whenever the mesh's client extent is 1
+    # or does not divide clients_per_round (graceful replication).
+    client_sharding: str = "none"     # none | cohort
     channel: ChannelConfig = field(default_factory=ChannelConfig)
 
     def resolved_delta(self) -> float:

@@ -73,6 +73,55 @@ def aircomp_aggregate_fused(updates_flat, idx, gains, beta, noise_key, *,
                           use_kernel=use_kernel, interpret=interpret)
 
 
+def aircomp_aggregate_sharded(updates_local, idx, gains_local, beta,
+                              noise_key, *, d: int, sigma0: float, r: int,
+                              axis_name, unbiased_rescale: bool = False,
+                              gains_est_local=None,
+                              clip: Optional[float] = None,
+                              use_kernel: bool = False,
+                              interpret: Optional[bool] = None):
+    """Sharded-cohort variant of :func:`aircomp_aggregate` (DESIGN.md §7).
+
+    Call INSIDE a ``shard_map`` manual region over ``axis_name`` with this
+    shard's (r_local, d) slice of the cohort's updates and (r_local,) slice
+    of the channel gains. Each shard computes its partial MAC sum and
+    transmit energy — via the fused Pallas kernel (``use_kernel=True``) or
+    the dense reference — and the AirComp superposition becomes a physical
+    cross-device ``psum`` over ``axis_name``.
+
+    PRNG/noise-identity contract (DESIGN.md §5): the channel noise is drawn
+    ONCE from ``noise_key`` — the exact draw of ``aircomp_aggregate`` /
+    ``fused_transmit`` — computed replicated on every shard and added AFTER
+    the psum, so the sharded round matches the single-device paths to fp32
+    accumulation order.
+
+    ``beta`` must be the Theorem-5 coefficient computed from the GLOBAL
+    gains (it is a min over all r clients — compute it before entering the
+    manual region, or from an all-gather). Returns
+    (delta_hat (d,), energy, y (k,)), all replicated over ``axis_name``.
+    """
+    mask, z_dense = transmit_ref.dense_noise_and_mask(idx, noise_key,
+                                                      sigma0, d)
+    zeros = jnp.zeros((d,), jnp.float32)
+    u = updates_local.astype(jnp.float32)
+    if use_kernel:
+        from repro.kernels.pfels_transmit.ops import fused_pipeline
+        y_part, e_part = fused_pipeline(
+            u, mask, zeros, gains_local, beta, clip=clip,
+            gains_est=gains_est_local, interpret=interpret)
+    else:
+        scales = transmit_ref.clip_scales(u, clip)
+        tx, rx = transmit_ref.transmit_coeffs(gains_local, beta, scales,
+                                              gains_est_local)
+        y_part, e_part = transmit_ref.pfels_transmit_ref(u, mask, zeros, rx,
+                                                         tx ** 2)
+    y_dense = jax.lax.psum(y_part, axis_name) + z_dense
+    energy = jax.lax.psum(e_part, axis_name)
+    delta_hat = transmit_ref.server_unscale(y_dense, idx, beta, r, d,
+                                            unbiased_rescale)
+    return delta_hat, energy, y_dense[idx]
+
+
 def dp_fedavg_aggregate(updates_flat, clip: float, sigma: float, noise_key, *,
                         r: int):
     """DP-FedAvg baseline (Alg. 1 line 11/13): per-client clip + Gaussian

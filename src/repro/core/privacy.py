@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 
 def c2_coefficient(eta: float, tau: int, c1: float, r: int, n: int,
@@ -93,10 +94,15 @@ def pfels_noise_multiplier(beta: float, eta: float, tau: int, c1: float,
 
 @dataclass
 class PrivacyLedger:
-    """Tracks per-round spends over training."""
+    """Tracks per-round spends over training.
+
+    Empty-ledger contract: both ``total_basic`` and ``total_advanced``
+    return the float pair ``(0.0, 0.0)`` before any ``spend`` — nothing was
+    released, so no epsilon, delta, or delta' slack is charged.
+    """
     n: int
     delta: float
-    eps_rounds: list = None
+    eps_rounds: Optional[list] = None
 
     def __post_init__(self):
         if self.eps_rounds is None:
@@ -106,9 +112,12 @@ class PrivacyLedger:
         self.eps_rounds.append(float(eps_round))
 
     def total_basic(self):
-        return sum(self.eps_rounds), self.delta * len(self.eps_rounds)
+        """(eps_T, delta_T) under basic composition (sum of rounds)."""
+        return float(sum(self.eps_rounds)), self.delta * len(self.eps_rounds)
 
     def total_advanced(self, delta_prime: float = 1e-6):
+        """(eps_T, delta_T) under Dwork-Roth advanced composition, using
+        the worst round's eps (conservative)."""
         if not self.eps_rounds:
             return 0.0, 0.0
         e = max(self.eps_rounds)   # conservative: worst round

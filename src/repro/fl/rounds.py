@@ -4,50 +4,205 @@ One jitted ``round_fn`` runs: sample r clients -> vmapped local training ->
 rand_k projection -> Theorem-5 power control -> AirComp over the simulated
 MAC -> server update. Baselines (WFL-P Eq. 36, WFL-PDP Eq. 37, DP-FedAvg
 Alg. 1, FedAvg) share the same structure with their own aggregation.
+
+Sharded cohort execution (``cfg.client_sharding="cohort"``, DESIGN.md §7):
+the per-client pipeline (local training -> error-feedback add -> clip ->
+rand-k -> power scaling) runs under ``shard_map`` with the r selected
+clients partitioned over the ("pod", "data") mesh axes, and the AirComp
+sum becomes a physical cross-device ``psum`` — the over-the-air
+superposition as a distributed reduction. Three invariants keep it
+numerically aligned with the vmapped single-device path:
+
+  1. every PRNG draw (client sampling, per-client train keys, gains, rand-k
+     support, channel noise) happens from the SAME keys as the vmapped
+     path, outside the manual region or replicated inside it;
+  2. the per-client flat updates come back sharded over the cohort axis, so
+     the error-feedback scatter-back ``residuals.at[sel].set`` and all
+     metrics reuse the single-device code unchanged;
+  3. the Theorem-5 ``beta`` is computed from the globally sampled gains
+     before entering the manual region (it is a min over all r clients).
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Callable, Dict
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import PFELSConfig
 from repro.core import aggregation, channel, power_control, privacy, randk
 from repro.fl.client import local_train, model_update
 from repro.kernels.pfels_transmit import ref as transmit_ref
+from repro.launch.mesh import make_cohort_mesh, shard_map_compat
+from repro.sharding import rules
+
+_AIRCOMP_ALGS = ("pfels", "wfl_p", "wfl_pdp")
+_COHORT_AXES = ("pod", "data")
 
 
 @dataclass
 class FLState:
     params: Any
     power_limits: jnp.ndarray       # (N,) P_i, fixed per device
-    residuals: Any = None           # (N, d) error-feedback memory [28-30]
+    residuals: Optional[Any] = None  # (N, d) error-feedback memory [28-30]
     round: int = 0
 
 
 def setup(key, params, cfg: PFELSConfig, d: int) -> FLState:
-    kp, = jax.random.split(key, 1)
-    p_lim = channel.sample_power_limits(kp, cfg.num_clients, d, cfg.channel)
+    p_lim = channel.sample_power_limits(key, cfg.num_clients, d, cfg.channel)
     res = (jnp.zeros((cfg.num_clients, d), jnp.float32)
            if cfg.error_feedback else None)
     return FLState(params=params, power_limits=p_lim, residuals=res)
 
 
+def _resolve_cohort_mesh(cfg: PFELSConfig,
+                         mesh: Optional[Mesh]) -> Optional[Mesh]:
+    """The mesh the cohort will shard over, or None for the vmapped path.
+    With ``client_sharding="cohort"`` and no explicit mesh, builds one over
+    the visible devices sized to divide ``clients_per_round``."""
+    if cfg.client_sharding == "none":
+        return None
+    if cfg.client_sharding != "cohort":
+        raise ValueError(
+            f"unknown client_sharding mode {cfg.client_sharding!r}")
+    return mesh if mesh is not None else make_cohort_mesh(
+        cfg.clients_per_round)
+
+
+def _cohort_shards(cfg: PFELSConfig, mesh: Optional[Mesh]) -> int:
+    """Static shard count the round will actually use: the ('pod','data')
+    extent of `mesh` when it divides r, else 1 — the drop-to-replicated
+    convention of ``sharding.rules.resolve_spec`` applied to the client
+    dim."""
+    if mesh is None or cfg.client_sharding == "none":
+        return 1
+    n = rules.cohort_axis_size(mesh)
+    if n <= 1 or cfg.clients_per_round % n != 0:
+        return 1
+    return n
+
+
 def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
-                      unravel: Callable):
+                      unravel: Callable, mesh: Optional[Mesh] = None):
     """The raw (un-jitted) round body, uniform across algorithms: returns
     ``(new_params, metrics, new_residuals, delta_hat)`` so it can back both
     the single-round ``make_round_fn`` wrapper and the ``lax.scan`` driver
-    in ``make_training_fn``."""
+    in ``make_training_fn``. With ``cfg.client_sharding="cohort"`` and a
+    multi-device `mesh`, the per-client pipeline is shard_mapped over the
+    cohort axis (module docstring)."""
     k_coords = max(int(round(cfg.compression_ratio * d)), 1)
     alg = cfg.algorithm
     delta = cfg.resolved_delta()
     sigma0 = cfg.channel.noise_std
     r = cfg.clients_per_round
+    aircomp = alg in _AIRCOMP_ALGS
+    n_shards = _cohort_shards(cfg, mesh)
+
+    train = functools.partial(
+        local_train, loss_fn=loss_fn, steps=cfg.local_steps,
+        lr=cfg.local_lr, clip=cfg.clip, momentum=cfg.momentum)
+
+    def client_updates(params, cx, cy, ck):
+        """Local training (Alg. 2 lines 5-11) vmapped over any client
+        slice -> ((r_slice, d) flat updates, (r_slice,) losses)."""
+        new_params, losses = jax.vmap(
+            lambda x, y, k: train(params, x, y, k))(cx, cy, ck)
+        updates = jax.vmap(lambda np_: model_update(params, np_))(new_params)
+        flat = jax.vmap(lambda u: ravel_pytree(u)[0])(updates)
+        return flat, losses
+
+    def support_and_beta(gains, p_sel, prev_delta, idx_key):
+        """rand-k support omega_t + Theorem-5 power control, from the
+        GLOBAL (r,) gains — shared by both execution paths."""
+        if alg == "pfels":
+            if cfg.randk_mode == "server_topk" and prev_delta is not None:
+                # server-guided top-k (beyond paper): half the budget on
+                # the top coords of |Delta_hat_{t-1}| (shared across
+                # clients -> AirComp alignment preserved), half explored
+                # uniformly — pure top-k locks its support (coords never
+                # transmitted keep |Delta_hat|=0 and are never selected).
+                # A zero prev_delta (the scan driver's cold start) falls
+                # back to the uniform sample — top_k over |zeros| would
+                # deterministically pick coords 0..k1-1, biasing round 1.
+                def _warm_idx():
+                    k1 = k_coords // 2
+                    _, idx_top = jax.lax.top_k(jnp.abs(prev_delta), k1)
+                    scores = jax.random.uniform(idx_key, (d,))
+                    scores = scores.at[idx_top].set(-jnp.inf)
+                    _, idx_rand = jax.lax.top_k(scores, k_coords - k1)
+                    return jnp.concatenate([idx_top, idx_rand])
+
+                idx = jax.lax.cond(
+                    jnp.linalg.norm(prev_delta) > 0, _warm_idx,
+                    lambda: randk.sample_indices(idx_key, d, k_coords))
+            else:
+                idx = randk.sample_indices(idx_key, d, k_coords)
+            beta = power_control.beta_pfels(
+                gains, p_sel, d=d, k=k_coords, c1=cfg.clip,
+                eta=cfg.local_lr, tau=cfg.local_steps,
+                epsilon=cfg.epsilon, r=r, n=cfg.num_clients,
+                delta=delta, sigma0=sigma0)
+            return idx, beta, k_coords
+        idx = jnp.arange(d)
+        if alg == "wfl_p":
+            beta = power_control.beta_wfl_p(
+                gains, p_sel, c1=cfg.clip, eta=cfg.local_lr,
+                tau=cfg.local_steps)
+        else:
+            beta = power_control.beta_wfl_pdp(
+                gains, p_sel, c1=cfg.clip, eta=cfg.local_lr,
+                tau=cfg.local_steps, epsilon=cfg.epsilon, r=r,
+                n=cfg.num_clients, delta=delta, sigma0=sigma0)
+        return idx, beta, d
+
+    cohort_apply = None
+    if n_shards > 1:
+        spec_c = P(_COHORT_AXES)
+
+        def cohort_body(params, cx_l, cy_l, ck_l, res_l, gains_l, gest_l,
+                        idx, beta, noise_key):
+            # inside the manual region: sharding constraints must not
+            # re-reference the cohort axes
+            with rules.exclude_axes(*_COHORT_AXES):
+                flat_l, losses_l = client_updates(params, cx_l, cy_l, ck_l)
+            if cfg.error_feedback:
+                flat_l = flat_l + res_l
+            scales_l = jnp.ones((flat_l.shape[0],), jnp.float32)
+            if aircomp:
+                # same once-only clip-scale policy as the vmapped branch:
+                # error feedback needs the scales for the residual anyway,
+                # so compute them here, hand the aggregator pre-clipped
+                # updates (clip=None), and ship the scales back sharded
+                agg_updates, agg_clip = flat_l, cfg.transmit_clip
+                if cfg.transmit_clip is not None and cfg.error_feedback:
+                    scales_l = transmit_ref.clip_scales(flat_l,
+                                                        cfg.transmit_clip)
+                    agg_updates = flat_l * scales_l[:, None]
+                    agg_clip = None
+                delta_hat, energy, _ = aggregation.aircomp_aggregate_sharded(
+                    agg_updates, idx, gains_l, beta, noise_key, d=d,
+                    sigma0=sigma0, r=r, axis_name=_COHORT_AXES,
+                    unbiased_rescale=cfg.unbiased_rescale,
+                    gains_est_local=(gest_l if cfg.channel.csi_error > 0
+                                     else None),
+                    clip=agg_clip,
+                    use_kernel=cfg.use_fused_kernel)
+            else:
+                # dp_fedavg / fedavg aggregate on the gathered updates
+                # outside the manual region; only training is sharded
+                delta_hat = jnp.zeros((d,), jnp.float32)
+                energy = jnp.asarray(0.0, jnp.float32)
+            return flat_l, losses_l, scales_l, delta_hat, energy
+
+        cohort_apply = shard_map_compat(
+            cohort_body, mesh,
+            in_specs=(P(), spec_c, spec_c, spec_c, spec_c, spec_c, spec_c,
+                      P(), P(), P()),
+            out_specs=(spec_c, spec_c, spec_c, P(), P()))
 
     def round_core(params, power_limits, data_x, data_y, key,
                    residuals=None, prev_delta=None):
@@ -56,25 +211,45 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         sel = jax.random.choice(ks[0], cfg.num_clients, (r,), replace=False)
         cx, cy = data_x[sel], data_y[sel]
         p_sel = power_limits[sel]
-
-        # ---- local training (lines 5-11), vmapped over clients
         ck = jax.random.split(ks[1], r)
-        train = functools.partial(
-            local_train, loss_fn=loss_fn, steps=cfg.local_steps,
-            lr=cfg.local_lr, clip=cfg.clip, momentum=cfg.momentum)
-        new_params, losses = jax.vmap(
-            lambda x, y, k: train(params, x, y, k))(cx, cy, ck)
-        updates = jax.vmap(lambda np_: model_update(params, np_))(new_params)
-        flat_updates = jax.vmap(lambda u: ravel_pytree(u)[0])(updates)
 
-        # ---- error feedback [28-30] (beyond-paper option): add each
-        # selected client's residual memory to its update before
-        # sparsification; the untransmitted remainder is carried forward
-        if cfg.error_feedback and residuals is not None:
-            flat_updates = flat_updates + residuals[sel]
-
-        # ---- channel state for this round (§4.1)
+        # ---- channel state for this round (§4.1); imperfect CSI (beyond
+        # paper): clients precompensate with noisy gain estimates while the
+        # MAC applies the true gains
         gains = channel.sample_gains(ks[2], r, cfg.channel)
+        gains_est = channel.estimate_gains(ks[6], gains, cfg.channel)
+
+        idx = beta = None
+        k_used = d
+        if aircomp:
+            idx, beta, k_used = support_and_beta(gains, p_sel, prev_delta,
+                                                 ks[3])
+
+        # ---- local training (lines 5-11) + error feedback [28-30]
+        # (beyond-paper option): add each selected client's residual memory
+        # to its update before sparsification; the untransmitted remainder
+        # is carried forward
+        agg_sharded = None
+        transmit_scales = None
+        if cohort_apply is not None:
+            res_sel = (residuals[sel]
+                       if cfg.error_feedback and residuals is not None
+                       else jnp.zeros((r, d), jnp.float32))
+            flat_updates, losses, scales_sh, delta_sh, energy_sh = \
+                cohort_apply(
+                    params, cx, cy, ck, res_sel, gains, gains_est,
+                    idx if idx is not None else jnp.arange(1),
+                    beta if beta is not None else jnp.asarray(1.0,
+                                                              jnp.float32),
+                    ks[4])
+            if aircomp:
+                agg_sharded = (delta_sh, energy_sh)
+                if cfg.transmit_clip is not None and cfg.error_feedback:
+                    transmit_scales = scales_sh
+        else:
+            flat_updates, losses = client_updates(params, cx, cy, ck)
+            if cfg.error_feedback and residuals is not None:
+                flat_updates = flat_updates + residuals[sel]
 
         metrics: Dict[str, jnp.ndarray] = {
             "train_loss": jnp.mean(losses),
@@ -82,70 +257,31 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                 jnp.linalg.norm(flat_updates, axis=1)),
         }
 
-        # imperfect CSI (beyond paper): clients precompensate with noisy
-        # gain estimates while the MAC applies the true gains
-        gains_est = channel.estimate_gains(ks[6], gains, cfg.channel)
-
-        if alg in ("pfels", "wfl_p", "wfl_pdp"):
-            if alg == "pfels":
-                if cfg.randk_mode == "server_topk" and prev_delta is not None:
-                    # server-guided top-k (beyond paper): half the budget on
-                    # the top coords of |Delta_hat_{t-1}| (shared across
-                    # clients -> AirComp alignment preserved), half explored
-                    # uniformly — pure top-k locks its support (coords never
-                    # transmitted keep |Delta_hat|=0 and are never selected).
-                    # A zero prev_delta (the scan driver's cold start) falls
-                    # back to the uniform sample — top_k over |zeros| would
-                    # deterministically pick coords 0..k1-1, biasing round 1.
-                    def _warm_idx():
-                        k1 = k_coords // 2
-                        _, idx_top = jax.lax.top_k(jnp.abs(prev_delta), k1)
-                        scores = jax.random.uniform(ks[3], (d,))
-                        scores = scores.at[idx_top].set(-jnp.inf)
-                        _, idx_rand = jax.lax.top_k(scores, k_coords - k1)
-                        return jnp.concatenate([idx_top, idx_rand])
-
-                    idx = jax.lax.cond(
-                        jnp.linalg.norm(prev_delta) > 0, _warm_idx,
-                        lambda: randk.sample_indices(ks[3], d, k_coords))
-                else:
-                    idx = randk.sample_indices(ks[3], d, k_coords)
-                beta = power_control.beta_pfels(
-                    gains, p_sel, d=d, k=k_coords, c1=cfg.clip,
-                    eta=cfg.local_lr, tau=cfg.local_steps,
-                    epsilon=cfg.epsilon, r=r, n=cfg.num_clients,
-                    delta=delta, sigma0=sigma0)
-                k_used = k_coords
+        if aircomp:
+            if agg_sharded is not None:
+                delta_hat, energy = agg_sharded
             else:
-                idx = jnp.arange(d)
-                k_used = d
-                if alg == "wfl_p":
-                    beta = power_control.beta_wfl_p(
-                        gains, p_sel, c1=cfg.clip, eta=cfg.local_lr,
-                        tau=cfg.local_steps)
-                else:
-                    beta = power_control.beta_wfl_pdp(
-                        gains, p_sel, c1=cfg.clip, eta=cfg.local_lr,
-                        tau=cfg.local_steps, epsilon=cfg.epsilon, r=r,
-                        n=cfg.num_clients, delta=delta, sigma0=sigma0)
-            aggregate = (aggregation.aircomp_aggregate_fused
-                         if cfg.use_fused_kernel
-                         else aggregation.aircomp_aggregate)
-            # error feedback needs the clip scales for the residual anyway,
-            # so compute them ONCE here and hand the aggregator pre-clipped
-            # updates (clip=None) instead of paying a second full (r, d)
-            # norm sweep inside the fused kernel's client_sumsq pass
-            agg_updates, agg_clip = flat_updates, cfg.transmit_clip
-            if cfg.transmit_clip is not None and cfg.error_feedback:
-                transmit_scales = transmit_ref.clip_scales(
-                    flat_updates, cfg.transmit_clip)
-                agg_updates = flat_updates * transmit_scales[:, None]
-                agg_clip = None
-            delta_hat, energy, _ = aggregate(
-                agg_updates, idx, gains, beta, ks[4], d=d, sigma0=sigma0,
-                r=r, unbiased_rescale=cfg.unbiased_rescale,
-                gains_est=gains_est if cfg.channel.csi_error > 0 else None,
-                clip=agg_clip)
+                aggregate = (aggregation.aircomp_aggregate_fused
+                             if cfg.use_fused_kernel
+                             else aggregation.aircomp_aggregate)
+                # error feedback needs the clip scales for the residual
+                # anyway, so compute them ONCE here and hand the aggregator
+                # pre-clipped updates (clip=None) instead of paying a second
+                # full (r, d) norm sweep inside the fused kernel's
+                # client_sumsq pass
+                agg_updates, agg_clip = flat_updates, cfg.transmit_clip
+                if cfg.transmit_clip is not None and cfg.error_feedback:
+                    transmit_scales = transmit_ref.clip_scales(
+                        flat_updates, cfg.transmit_clip)
+                    agg_updates = flat_updates * transmit_scales[:, None]
+                    agg_clip = None
+                delta_hat, energy, _ = aggregate(
+                    agg_updates, idx, gains, beta, ks[4], d=d,
+                    sigma0=sigma0, r=r,
+                    unbiased_rescale=cfg.unbiased_rescale,
+                    gains_est=(gains_est if cfg.channel.csi_error > 0
+                               else None),
+                    clip=agg_clip)
             metrics.update(beta=beta, energy=energy,
                            subcarriers=jnp.asarray(k_used))
         elif alg == "dp_fedavg":
@@ -169,8 +305,9 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                     lambda u: randk.sparsify(u, idx, d))(flat_updates)
             else:
                 transmitted = flat_updates
-            if (cfg.transmit_clip is not None
-                    and alg in ("pfels", "wfl_p", "wfl_pdp")):
+            if cfg.transmit_clip is not None and aircomp:
+                # computed once by whichever path aggregated (both set it
+                # under exactly this transmit_clip + error_feedback case)
                 transmitted = transmitted * transmit_scales[:, None]
             new_residuals = residuals.at[sel].set(
                 flat_updates - transmitted)
@@ -184,15 +321,20 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
 
 
 def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
-                  unravel: Callable):
+                  unravel: Callable, mesh: Optional[Mesh] = None):
     """Builds the jitted single-round function.
 
     loss_fn(params, {"x","y"}) -> (loss, aux). d = flat dim; unravel maps a
     flat (d,) vector back to the params pytree. Returns
     ``(params, metrics)`` or, with ``cfg.error_feedback``,
     ``(params, metrics, residuals)``.
+
+    ``mesh``: cohort mesh for ``cfg.client_sharding="cohort"`` (defaults to
+    ``make_cohort_mesh(cfg.clients_per_round)`` over the visible devices);
+    ignored with ``client_sharding="none"``.
     """
-    core = _build_round_core(cfg, loss_fn, d, unravel)
+    mesh = _resolve_cohort_mesh(cfg, mesh)
+    core = _build_round_core(cfg, loss_fn, d, unravel, mesh)
 
     def round_fn(params, power_limits, data_x, data_y, key,
                  residuals=None, prev_delta=None):
@@ -200,7 +342,7 @@ def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
             params, power_limits, data_x, data_y, key, residuals,
             prev_delta)
         if (cfg.randk_mode == "server_topk"
-                and cfg.algorithm in ("pfels", "wfl_p", "wfl_pdp")):
+                and cfg.algorithm in _AIRCOMP_ALGS):
             metrics["delta_hat"] = delta_hat  # seed-era consumer contract
         if cfg.error_feedback:
             return new_params, metrics, new_residuals
@@ -210,7 +352,8 @@ def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
 
 
 def make_training_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
-                     unravel: Callable, rounds: int = None):
+                     unravel: Callable, rounds: Optional[int] = None,
+                     mesh: Optional[Mesh] = None):
     """Builds a jitted T-round driver: one ``lax.scan`` over rounds in a
     single compiled program, carrying ``(params, residuals, prev_delta)``
     state — long simulations stop paying per-round dispatch/retrace
@@ -222,10 +365,12 @@ def make_training_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
     (leading axis T) and ``delta_T`` is the last round's reconstructed
     update — feed it (and ``residuals_T``) back in to resume chunked
     training without resetting the server_topk support or the
-    error-feedback memory. ``rounds`` defaults to ``cfg.rounds``.
+    error-feedback memory. ``rounds`` defaults to ``cfg.rounds``; ``mesh``
+    as in :func:`make_round_fn`.
     """
     t_rounds = cfg.rounds if rounds is None else rounds
-    core = _build_round_core(cfg, loss_fn, d, unravel)
+    mesh = _resolve_cohort_mesh(cfg, mesh)
+    core = _build_round_core(cfg, loss_fn, d, unravel, mesh)
 
     def training_fn(params, power_limits, data_x, data_y, key,
                     residuals=None, prev_delta=None):

@@ -26,6 +26,42 @@ def _pad_cols(x: jnp.ndarray, d_pad: int) -> jnp.ndarray:
     return jnp.pad(x, ((0, 0), (0, pad))) if pad else x
 
 
+def fused_pipeline(u: jnp.ndarray, mask: jnp.ndarray, z_dense: jnp.ndarray,
+                   gains: jnp.ndarray, beta, *,
+                   clip: Optional[float] = None, gains_est=None,
+                   interpret: Optional[bool] = None, block: int = 4096):
+    """Kernel-invoking core shared by :func:`fused_transmit` (whole cohort)
+    and ``aggregation.aircomp_aggregate_sharded`` (per-shard client slice,
+    zero noise — the channel noise is added once after the cross-device
+    psum). u: (r_any, d) f32; mask/z_dense: (d,). Returns
+    (y_dense (d,), energy) — the dense received signal BEFORE the
+    server-side 1/(r beta) unscale."""
+    if interpret is None:   # compiled kernel on TPU, interpreter elsewhere
+        interpret = jax.default_backend() != "tpu"
+    d = u.shape[-1]
+    # pick the tile count first, then round the per-tile width up to a
+    # whole number of lanes — pads at most one lane-multiple per tile
+    # instead of up to a whole `block` of dead columns (d=4100 with a
+    # fixed 4096 block would otherwise process 2x the columns)
+    n_tiles = max(1, -(-d // block))
+    blk = -(-(-(-d // n_tiles)) // LANES) * LANES
+    d_pad = n_tiles * blk
+    u_pad = _pad_cols(u, d_pad)
+    if clip is not None:
+        sumsq = client_sumsq(u_pad, block=blk, interpret=interpret)
+        scales = ref.scales_from_norms(jnp.sqrt(sumsq[:, 0]), clip)
+    else:
+        scales = jnp.ones((u.shape[0],), jnp.float32)
+    tx, rx = ref.transmit_coeffs(gains, beta, scales, gains_est)
+    y2d, e2d = fused_combine(
+        u_pad, _pad_cols(mask[None, :], d_pad),
+        _pad_cols(z_dense[None, :], d_pad),
+        rx.astype(jnp.float32)[:, None],
+        (tx.astype(jnp.float32) ** 2)[:, None],
+        block=blk, interpret=interpret)
+    return y2d[0, :d], e2d[0, 0]
+
+
 def fused_transmit(updates_flat: jnp.ndarray, idx: jnp.ndarray,
                    gains: jnp.ndarray, beta, noise_key, *, d: int,
                    sigma0: float, r: int, clip: Optional[float] = None,
@@ -42,44 +78,19 @@ def fused_transmit(updates_flat: jnp.ndarray, idx: jnp.ndarray,
     Returns (delta_hat (d,), energy, y (k,)) exactly like
     ``aircomp_aggregate``.
     """
-    if interpret is None:   # compiled kernel on TPU, interpreter elsewhere
-        interpret = jax.default_backend() != "tpu"
-    k = idx.shape[0]
-    n_clients = updates_flat.shape[0]
-    noise = sigma0 * jax.random.normal(noise_key, (k,))
-    mask = jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
-    z_dense = jnp.zeros((d,), jnp.float32).at[idx].set(noise)
+    mask, z_dense = ref.dense_noise_and_mask(idx, noise_key, sigma0, d)
     u = updates_flat.astype(jnp.float32)
 
     if use_kernel:
-        # pick the tile count first, then round the per-tile width up to a
-        # whole number of lanes — pads at most one lane-multiple per tile
-        # instead of up to a whole `block` of dead columns (d=4100 with a
-        # fixed 4096 block would otherwise process 2x the columns)
-        n_tiles = max(1, -(-d // block))
-        blk = -(-(-(-d // n_tiles)) // LANES) * LANES
-        d_pad = n_tiles * blk
-        u_pad = _pad_cols(u, d_pad)
-        if clip is not None:
-            sumsq = client_sumsq(u_pad, block=blk, interpret=interpret)
-            scales = ref.scales_from_norms(jnp.sqrt(sumsq[:, 0]), clip)
-        else:
-            scales = jnp.ones((n_clients,), jnp.float32)
-        tx, rx = ref.transmit_coeffs(gains, beta, scales, gains_est)
-        y2d, e2d = fused_combine(
-            u_pad, _pad_cols(mask[None, :], d_pad),
-            _pad_cols(z_dense[None, :], d_pad),
-            rx.astype(jnp.float32)[:, None],
-            (tx.astype(jnp.float32) ** 2)[:, None],
-            block=blk, interpret=interpret)
-        y_dense, energy = y2d[0, :d], e2d[0, 0]
+        y_dense, energy = fused_pipeline(
+            u, mask, z_dense, gains, beta, clip=clip, gains_est=gains_est,
+            interpret=interpret, block=block)
     else:
         scales = ref.clip_scales(u, clip)
         tx, rx = ref.transmit_coeffs(gains, beta, scales, gains_est)
         y_dense, energy = ref.pfels_transmit_ref(u, mask, z_dense, rx,
                                                  tx ** 2)
 
-    delta_hat = y_dense / (r * beta)
-    if unbiased_rescale:
-        delta_hat = delta_hat * (d / k)
+    delta_hat = ref.server_unscale(y_dense, idx, beta, r, d,
+                                   unbiased_rescale)
     return delta_hat, energy, y_dense[idx]

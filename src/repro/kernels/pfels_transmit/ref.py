@@ -18,7 +18,32 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
+
+
+def dense_noise_and_mask(idx: jnp.ndarray, noise_key, sigma0: float,
+                         d: int):
+    """(mask, z_dense): the 0/1 indicator of omega and the channel noise
+    scattered onto it. THE single PRNG-critical noise draw
+    (``sigma0 * normal(noise_key, (k,))``) shared by the fused and sharded
+    AirComp paths — parity across execution modes (DESIGN.md §5) depends
+    on every path taking it from here."""
+    noise = sigma0 * jax.random.normal(noise_key, (idx.shape[0],))
+    mask = jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
+    z_dense = jnp.zeros((d,), jnp.float32).at[idx].set(noise)
+    return mask, z_dense
+
+
+def server_unscale(y_dense: jnp.ndarray, idx: jnp.ndarray, beta, r: int,
+                   d: int, unbiased_rescale: bool = False) -> jnp.ndarray:
+    """Receiver-side reconstruction Delta_hat = y_dense/(r beta), with the
+    optional beyond-paper d/k unbiasing — the common tail of every
+    aggregation path."""
+    delta_hat = y_dense / (r * beta)
+    if unbiased_rescale:
+        delta_hat = delta_hat * (d / idx.shape[0])
+    return delta_hat
 
 
 def scales_from_norms(norms: jnp.ndarray, clip: float) -> jnp.ndarray:

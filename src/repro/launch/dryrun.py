@@ -220,11 +220,71 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return record
 
 
+def dryrun_cohort(*, clients_per_round: int = 32, verbose: bool = True):
+    """Lower + compile the sharded FL round (client_sharding="cohort",
+    DESIGN.md §7) on a cohort mesh carved from the forced host devices:
+    sanity-checks that the shard_map round lowers at pod scale and records
+    its compile/memory numbers like the model dry-runs."""
+    from jax.flatten_util import ravel_pytree
+
+    from repro.configs.paper_models import BENCH_MLP
+    from repro.data import make_federated_classification
+    from repro.fl import make_round_fn, setup
+    from repro.launch.mesh import make_cohort_mesh
+    from repro.models import cnn
+
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_cnn(key, BENCH_MLP)
+    flat, unravel = ravel_pytree(params)
+    d = flat.shape[0]
+    x, y, _, _ = make_federated_classification(
+        key, n_clients=1000, per_client=30, num_classes=10,
+        image_shape=(1, 8, 8))
+    loss_fn = lambda p, b: cnn.cnn_loss(p, BENCH_MLP, b)
+    cfg = PFELSConfig(num_clients=1000, clients_per_round=clients_per_round,
+                      local_steps=1, client_sharding="cohort")
+    mesh = make_cohort_mesh(cfg.clients_per_round)
+    shards = mesh.shape["pod"] * mesh.shape["data"]
+    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+
+    t0 = time.time()
+    fn = make_round_fn(cfg, loss_fn, d, unravel, mesh=mesh)
+    lowered = fn.lower(params, st.power_limits, x, y, jax.random.PRNGKey(2))
+    compiled = lowered.compile()
+    t1 = time.time()
+    mem = compiled.memory_analysis()
+    record = {
+        "kind": "cohort_round", "d": int(d),
+        "clients_per_round": cfg.clients_per_round,
+        "mesh": dict(mesh.shape), "shards": shards,
+        "compile_s": round(t1 - t0, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes_per_device": (mem.argument_size_in_bytes
+                                      + mem.temp_size_in_bytes),
+        },
+    }
+    if verbose:
+        gb = 1 << 30
+        print(f"[cohort round r={cfg.clients_per_round} x "
+              f"{dict(mesh.shape)}] compile={record['compile_s']}s"
+              f" mem/dev="
+              f"{record['memory']['peak_bytes_per_device']/gb:.3f}GiB"
+              f" shards={shards}", flush=True)
+    return record
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--cohort", action="store_true",
+                    help="dry-run the sharded FL round (client_sharding="
+                         "'cohort') instead of a model x shape combination")
+    ap.add_argument("--cohort-r", type=int, default=32,
+                    help="clients per round for --cohort")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--no-loop-analysis", action="store_true")
     ap.add_argument("--perf", action="store_true",
@@ -233,6 +293,13 @@ def main():
     args = ap.parse_args()
 
     os.makedirs(args.out, exist_ok=True)
+    if args.cohort:
+        rec = dryrun_cohort(clients_per_round=args.cohort_r)
+        path = os.path.join(args.out, f"cohort_round__r{args.cohort_r}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        print("cohort dry-run OK")
+        return
     jobs = []
     if args.all:
         for a in list_archs():

@@ -58,3 +58,48 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
     n = int(np.prod(shape))
     dev = np.array(jax.devices()[:n]).reshape(shape)
     return make_mesh(dev, axes)
+
+
+def cohort_shape(r: int, n_dev: int):
+    """(pod, data) extents for a cohort of r clients on n_dev devices: the
+    total is the LARGEST divisor of r that fits, so an awkward r degrades to
+    fewer shards — and ultimately to (1, 1), the replicated single-device
+    path — instead of failing to lower (the same drop-to-replicated
+    convention as ``sharding.rules.resolve_spec``). The shard count is split
+    pod-major with pod <= data (pods are the scarcer physical unit)."""
+    n = min(max(int(n_dev), 1), max(int(r), 1))
+    while n > 1 and r % n:
+        n -= 1
+    pod = 1
+    for p in range(int(n ** 0.5), 0, -1):
+        if n % p == 0:
+            pod = p
+            break
+    return pod, n // pod
+
+
+def make_cohort_mesh(r: int, *, devices=None) -> Mesh:
+    """('pod', 'data') mesh for sharded cohort execution (DESIGN.md §7):
+    each of the r selected FL clients lives on exactly one mesh slot, so
+    the AirComp sum is a physical cross-device psum. Degrades via
+    :func:`cohort_shape` when r does not divide the device count."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    pod, data = cohort_shape(r, len(devices))
+    dev = np.array(devices[: pod * data]).reshape(pod, data)
+    return make_mesh(dev, ("pod", "data"))
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """Version-portable ``shard_map`` (jax.shard_map on new jax,
+    jax.experimental.shard_map on the 0.4.x floor), with replication
+    checking off — the cohort path communicates via explicit psums."""
+    try:
+        from jax import shard_map as sm          # jax >= 0.6
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+    try:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False)
+    except TypeError:                             # check_rep -> check_vma
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=False)

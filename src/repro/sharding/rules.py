@@ -23,6 +23,9 @@ LOGICAL_TO_MESH = {
     "fsdp": "data",
     "tensor": "model",
     "clients": "pod",       # explicit client (FL) dim of param replicas
+    "cohort": ("pod", "data"),  # FL-round client dim of (r, d) update
+                                # batches under sharded cohort execution
+                                # (DESIGN.md §7) — one client per mesh slot
     "batch": ("pod", "data"),
     "batch_nopod": "data",
     "seq_mp": "model",      # sequence dim sharded over model (context parallel)
@@ -30,6 +33,12 @@ LOGICAL_TO_MESH = {
     "layers": None,
     None: None,
 }
+
+
+def cohort_axis_size(mesh: Mesh) -> int:
+    """Extent of the FL-cohort client dim on `mesh` (the ('pod','data')
+    product) — how many shards the round's r clients split into."""
+    return mesh_axis_size(mesh, LOGICAL_TO_MESH["cohort"])
 
 
 def mesh_axis_size(mesh: Mesh, axis) -> int:

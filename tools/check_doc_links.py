@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Docs reference checker (run by the CI docs job and tests/test_docs.py).
+
+Two checks, both against the repo root this file lives under:
+
+1. Every file path referenced from DESIGN.md / docs/paper_map.md /
+   README.md (backticked tokens that look like paths with a known
+   extension) resolves to a real file — tried verbatim, under src/, and
+   under src/repro/.
+2. Every ``DESIGN.md §N`` citation in the Python sources resolves to a
+   real ``## N.`` section of DESIGN.md.
+
+Exit status 0 when clean; prints one line per problem otherwise.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ["DESIGN.md", os.path.join("docs", "paper_map.md"), "README.md"]
+EXTS = (".py", ".md", ".yml", ".yaml", ".ini", ".json", ".toml")
+# backticked `path/to/file.ext` (optionally with a :line or trailing /)
+_PATH_RE = re.compile(r"`([A-Za-z0-9_./-]+?)/?(?::\d+)?`")
+_SECTION_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+_HEADING_RE = re.compile(r"^##\s+(\d+)\.", re.M)
+
+
+def _basenames():
+    names = set()
+    for sub in ("src", "tests", "tools", "benchmarks", "examples", "docs"):
+        for _, _, files in os.walk(os.path.join(ROOT, sub)):
+            names.update(files)
+    names.update(f for f in os.listdir(ROOT) if os.path.isfile(
+        os.path.join(ROOT, f)))
+    return names
+
+
+_BASENAMES = None
+
+
+def _resolves(path: str) -> bool:
+    for cand in {path,
+                 # `pkg/module.attr` / `pkg/module.Class.method` references:
+                 # strip the attribute part down to the module file
+                 path.split(".")[0] + ".py" if not path.endswith(EXTS)
+                 else path}:
+        for base in ("", "src", os.path.join("src", "repro")):
+            if os.path.exists(os.path.join(ROOT, base, cand)):
+                return True
+    if "/" not in path:   # bare filename (`ref.py` in a layout description)
+        global _BASENAMES
+        if _BASENAMES is None:
+            _BASENAMES = _basenames()
+        return path in _BASENAMES
+    return False
+
+
+def check_doc_paths():
+    """-> list of 'doc: missing path' problems."""
+    problems = []
+    for doc in DOCS:
+        full = os.path.join(ROOT, doc)
+        if not os.path.exists(full):
+            problems.append(f"{doc}: document itself is missing")
+            continue
+        text = open(full).read()
+        for tok in _PATH_RE.findall(text):
+            # a path reference = has a directory part or a known extension
+            if not (tok.endswith(EXTS) or ("/" in tok and "." in tok)):
+                continue
+            if not _resolves(tok):
+                problems.append(f"{doc}: referenced path `{tok}` not found")
+    return problems
+
+
+def check_design_sections():
+    """-> list of unresolved 'DESIGN.md §N' citations in src/**.py."""
+    design = os.path.join(ROOT, "DESIGN.md")
+    sections = (set(_HEADING_RE.findall(open(design).read()))
+                if os.path.exists(design) else set())
+    problems = []
+    for dirpath, _, files in os.walk(os.path.join(ROOT, "src")):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            for n in _SECTION_RE.findall(open(path).read()):
+                if n not in sections:
+                    rel = os.path.relpath(path, ROOT)
+                    problems.append(
+                        f"{rel}: cites DESIGN.md §{n} but DESIGN.md has no "
+                        f"'## {n}.' section")
+    return problems
+
+
+def main() -> int:
+    problems = check_doc_paths() + check_design_sections()
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"{len(problems)} doc reference problem(s)")
+        return 1
+    print("doc references OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
