@@ -13,34 +13,24 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
-from benchmarks.common import build_problem, scaled_channel
-from repro.configs import PFELSConfig
-from repro.fl import evaluate, make_round_fn, setup
+from benchmarks.common import build_problem, make_trainer, scaled_channel
+from repro.fl.api import replace
 
 
 def _run_variant(problem, *, rounds=30, eps=1.0, p=0.3, seed=0, **kw):
-    params, d, unravel, (x, y, xt, yt), loss_fn = problem
-    chan = kw.pop("channel", None) or scaled_channel(d)
-    cfg = PFELSConfig(num_clients=60, clients_per_round=8, local_steps=5,
-                      local_lr=0.05, compression_ratio=p, epsilon=eps,
-                      rounds=rounds, momentum=0.9, channel=chan, **kw)
-    state = setup(jax.random.PRNGKey(1), params, cfg, d)
-    fn = make_round_fn(cfg, loss_fn, d, unravel)
-    pm = params
-    res = state.residuals
-    prev = jnp.zeros((d,)) if cfg.randk_mode == "server_topk" else None
+    """One Trainer.run call: the error-feedback memory and the server_topk
+    support (TrainState.residuals / .prev_delta) carry inside the compiled
+    state — no more per-config hand-threading of residuals and the
+    metrics-smuggled delta_hat."""
+    x, y, xt, yt = problem[3]
+    trainer, state = make_trainer("pfels", problem, rounds=rounds, p=p,
+                                  eps=eps, **kw)
+    state = replace(state, key=jax.random.PRNGKey(seed * 999))
     t0 = time.time()
-    for t in range(rounds):
-        key = jax.random.PRNGKey(seed * 999 + t)
-        if cfg.error_feedback:
-            pm, m, res = fn(pm, state.power_limits, x, y, key, res, prev)
-        else:
-            pm, m = fn(pm, state.power_limits, x, y, key, None, prev)
-        if prev is not None:
-            prev = m["delta_hat"]
-    _, acc = evaluate(pm, loss_fn, xt, yt)
+    state, _ = trainer.run(state, x, y, rounds=rounds)
+    jax.block_until_ready(state.params)
+    _, acc = trainer.evaluate(state, xt, yt)
     return acc, (time.time() - t0) / rounds * 1e6
 
 

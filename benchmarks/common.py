@@ -1,31 +1,19 @@
 """Shared FL-benchmark harness (CPU-scale reproduction of the paper's
-experimental protocol, DESIGN.md §2)."""
+experimental protocol, DESIGN.md §2), on the unified Trainer API."""
 from __future__ import annotations
 
-import math
 import time
 
 import jax
-import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
-from repro.configs import ChannelConfig, PFELSConfig
+from repro.configs import PFELSConfig
 from repro.configs.paper_models import BENCH_MLP
+from repro.core.channel import PAPER_D, scaled_channel  # shared regime helper
 from repro.data import make_federated_classification
-from repro.fl import evaluate, make_round_fn, setup
+from repro.fl import Trainer
+from repro.fl.api import replace
 from repro.models import cnn
-
-PAPER_D = 9_750_922  # paper's VGG-11 dimension
-
-
-def scaled_channel(d: int) -> ChannelConfig:
-    """The power cap floor is beta_min ~ gain_min * sqrt(d) * sqrt(SNR)
-    (Eq. 34c with P = SNR*d*sigma0^2). Reproducing the paper's REGIME at a
-    reduced model dimension therefore requires scaling the fading floor by
-    sqrt(d_paper/d); otherwise worst-channel rounds inject catastrophically
-    larger relative noise than the paper ever sees."""
-    floor = 1e-4 * math.sqrt(PAPER_D / d)
-    return ChannelConfig(gain_clip=(min(floor, 0.05), 0.1))
 
 
 def build_problem(seed=0, n_clients=60, per_client=40, model_cfg=BENCH_MLP):
@@ -41,34 +29,43 @@ def build_problem(seed=0, n_clients=60, per_client=40, model_cfg=BENCH_MLP):
     return params, flat.shape[0], unravel, data, loss_fn
 
 
+def make_trainer(alg, problem, *, rounds=40, p=0.3, eps=1.5, n_clients=60,
+                 r=8, tau=5, lr=0.05, dp_sigma=1.0, **extra):
+    """(trainer, initial state) for one benchmark configuration — the one
+    construction every fig/beyond benchmark shares."""
+    params, d, unravel, _, loss_fn = problem
+    cfg = PFELSConfig(num_clients=n_clients, clients_per_round=r,
+                      local_steps=tau, local_lr=lr,
+                      compression_ratio=p, epsilon=eps, rounds=rounds,
+                      momentum=0.9, algorithm=alg,
+                      dp_fedavg_sigma=dp_sigma,
+                      channel=extra.pop("channel", None)
+                      or scaled_channel(d), **extra)
+    trainer = Trainer(cfg, loss_fn, params)
+    return trainer, trainer.init(jax.random.PRNGKey(1))
+
+
 def run_fl(alg: str, *, rounds=40, p=0.3, eps=1.5, seeds=(0, 1, 2),
            n_clients=60, r=8, tau=5, lr=0.05, problem=None,
            dp_sigma=1.0):
     """Returns dict with mean final accuracy, energy, subcarriers, and
     us_per_round."""
+    prob = problem or build_problem(seed=0, n_clients=n_clients)
+    trainer, state0 = make_trainer(alg, prob, rounds=rounds, p=p, eps=eps,
+                                   n_clients=n_clients, r=r, tau=tau,
+                                   lr=lr, dp_sigma=dp_sigma)
+    x, y, xt, yt = prob[3]
     accs, energies, subs, times = [], [], [], []
-    for seed in seeds:
-        params, d, unravel, (x, y, xt, yt), loss_fn = \
-            problem or build_problem(seed=0, n_clients=n_clients)
-        cfg = PFELSConfig(num_clients=n_clients, clients_per_round=r,
-                          local_steps=tau, local_lr=lr,
-                          compression_ratio=p, epsilon=eps, rounds=rounds,
-                          momentum=0.9, algorithm=alg,
-                          dp_fedavg_sigma=dp_sigma,
-                          channel=scaled_channel(d))
-        state = setup(jax.random.PRNGKey(1), params, cfg, d)
-        fn = make_round_fn(cfg, loss_fn, d, unravel)
-        pm, energy = params, 0.0
+    for seed in seeds:   # one compiled program, one state per seed key
+        state = replace(state0, key=jax.random.PRNGKey(seed * 10000))
         t0 = time.time()
-        for t in range(rounds):
-            pm, m = fn(pm, state.power_limits, x, y,
-                       jax.random.PRNGKey(seed * 10000 + t))
-            energy += float(m["energy"])
+        state, m = trainer.run(state, x, y, rounds=rounds)
+        jax.block_until_ready(state.params)
         wall = time.time() - t0
-        _, acc = evaluate(pm, loss_fn, xt, yt)
+        _, acc = trainer.evaluate(state, xt, yt)
         accs.append(acc)
-        energies.append(energy)
-        subs.append(int(m["subcarriers"]))
+        energies.append(float(m["energy"].sum()))
+        subs.append(int(m["subcarriers"][-1]))
         times.append(wall / rounds * 1e6)
     n = len(seeds)
     return {"algorithm": alg, "p": p, "epsilon": eps,

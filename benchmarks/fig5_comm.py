@@ -11,33 +11,28 @@ import time
 
 import jax
 
-from benchmarks.common import build_problem, scaled_channel
-from repro.configs import PFELSConfig
-from repro.fl import evaluate, make_round_fn, setup
+from benchmarks.common import build_problem, make_trainer
+from repro.fl.api import replace
 
 
 def run(rounds=60, eps=1.5, p=0.3, comm_budget_factor=0.5):
     """comm budget = factor * (rounds * d) subcarriers."""
-    params, d, unravel, (x, y, xt, yt), loss_fn = build_problem()
+    problem = build_problem()
+    d = problem[1]
+    x, y, xt, yt = problem[3]
     budget = comm_budget_factor * rounds * d
     rows = []
     for alg in ("pfels", "wfl_p", "wfl_pdp"):
-        cfg = PFELSConfig(num_clients=60, clients_per_round=8,
-                          local_steps=5, local_lr=0.05,
-                          compression_ratio=p, epsilon=eps,
-                          rounds=rounds, momentum=0.9, algorithm=alg,
-                          channel=scaled_channel(d))
-        state = setup(jax.random.PRNGKey(1), params, cfg, d)
-        fn = make_round_fn(cfg, loss_fn, d, unravel)
-        pm, comm = params, 0.0
+        trainer, state = make_trainer(alg, problem, rounds=rounds, p=p,
+                                      eps=eps)
+        state = replace(state, key=jax.random.PRNGKey(5000))
+        comm = 0.0
         t0 = time.time()
-        t = 0
-        while comm < budget and t < rounds * 4:
-            pm, m = fn(pm, state.power_limits, x, y,
-                       jax.random.PRNGKey(5000 + t))
+        while comm < budget and int(state.round) < rounds * 4:
+            state, m = trainer.step(state, x, y)
             comm += float(m["subcarriers"])
-            t += 1
-        _, acc = evaluate(pm, loss_fn, xt, yt)
+        t = int(state.round)
+        _, acc = trainer.evaluate(state, xt, yt)
         us = (time.time() - t0) / max(t, 1) * 1e6
         print(f"fig5 {alg:8s} comm={comm:.2e} rounds={t} acc={acc:.3f}",
               flush=True)

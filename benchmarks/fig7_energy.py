@@ -9,29 +9,22 @@ import time
 
 import jax
 
-from benchmarks.common import build_problem, scaled_channel
-from repro.configs import PFELSConfig
-from repro.fl import evaluate, make_round_fn, setup
+from benchmarks.common import build_problem, make_trainer
+from repro.fl.api import replace
 
 
 def run(rounds=40, eps=1.5):
-    params, d, unravel, (x, y, xt, yt), loss_fn = build_problem()
+    problem = build_problem()
+    x, y, xt, yt = problem[3]
     rows = []
     for alg in ("pfels", "wfl_p", "wfl_pdp"):
-        cfg = PFELSConfig(num_clients=60, clients_per_round=8,
-                          local_steps=5, local_lr=0.05,
-                          compression_ratio=0.3, epsilon=eps,
-                          rounds=rounds, momentum=0.9, algorithm=alg,
-                          channel=scaled_channel(d))
-        state = setup(jax.random.PRNGKey(1), params, cfg, d)
-        fn = make_round_fn(cfg, loss_fn, d, unravel)
-        pm, energy = params, 0.0
+        trainer, state = make_trainer(alg, problem, rounds=rounds, eps=eps)
+        state = replace(state, key=jax.random.PRNGKey(7000))
         t0 = time.time()
-        for t in range(rounds):
-            pm, m = fn(pm, state.power_limits, x, y,
-                       jax.random.PRNGKey(7000 + t))
-            energy += float(m["energy"])
-        _, acc = evaluate(pm, loss_fn, xt, yt)
+        state, m = trainer.run(state, x, y, rounds=rounds)
+        jax.block_until_ready(state.params)
+        energy = float(m["energy"].sum())
+        _, acc = trainer.evaluate(state, xt, yt)
         us = (time.time() - t0) / rounds * 1e6
         print(f"fig7 {alg:8s} energy={energy:.3e} acc={acc:.3f}",
               flush=True)

@@ -59,6 +59,8 @@ def bench_pfels_transmit(key, rows, *, r=16, d=128 * 512):
 def _fl_problem(cfg):
     """One shared FL benchmark problem (BENCH_MLP on synthetic federated
     data) so every round-driver row measures the same thing."""
+    import warnings
+
     from jax.flatten_util import ravel_pytree
 
     from repro.configs.paper_models import BENCH_MLP
@@ -74,21 +76,31 @@ def _fl_problem(cfg):
         key, n_clients=30, per_client=30, num_classes=10,
         image_shape=(1, 8, 8))
     loss_fn = lambda p, b: cnn.cnn_loss(p, BENCH_MLP, b)
-    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        st = setup(jax.random.PRNGKey(1), params, cfg, d)
     return params, d, unravel, (x, y), loss_fn, st
 
 
 def bench_round_drivers(rows, *, t_rounds=8):
-    """T rounds: python loop over the jitted round_fn (one dispatch per
-    round) vs one lax.scan-compiled program (make_training_fn)."""
+    """T rounds, three drivers: python loop over the jitted legacy
+    round_fn (one dispatch per round), the legacy lax.scan driver, and
+    Trainer.run — the trainer_run-vs-legacy_scan pair demonstrates the new
+    API wrapper adds no dispatch overhead over the raw scan."""
+    import warnings
+
     from repro.configs import PFELSConfig
-    from repro.fl import make_round_fn, make_training_fn
+    from repro.fl import Trainer, make_round_fn, make_training_fn
+    from repro.fl.api import replace
 
     cfg = PFELSConfig(num_clients=30, clients_per_round=8, local_steps=3,
                       rounds=t_rounds)
     params, d, unravel, (x, y), loss_fn, st = _fl_problem(cfg)
 
-    fn = make_round_fn(cfg, loss_fn, d, unravel)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        fn = make_round_fn(cfg, loss_fn, d, unravel)
+        tf = make_training_fn(cfg, loss_fn, d, unravel, rounds=t_rounds)
     keys = jax.random.split(jax.random.PRNGKey(2), t_rounds)
 
     def loop():
@@ -100,35 +112,47 @@ def bench_round_drivers(rows, *, t_rounds=8):
     us = _time(lambda: jax.tree.leaves(loop())[0], reps=3)
     rows.append(("rounds_python_loop", us, f"T={t_rounds},d={d}"))
 
-    tf = make_training_fn(cfg, loss_fn, d, unravel, rounds=t_rounds)
     us = _time(lambda: tf(params, st.power_limits, x, y,
                           jax.random.PRNGKey(2))[0], reps=3)
-    rows.append(("rounds_lax_scan", us, f"T={t_rounds},d={d}"))
+    rows.append(("rounds_legacy_scan", us, f"T={t_rounds},d={d}"))
+
+    trainer = Trainer(cfg, loss_fn, params)
+    state = replace(trainer.init(jax.random.PRNGKey(1)),
+                    key=jax.random.PRNGKey(2))
+    us = _time(lambda: trainer.run(state, x, y,
+                                   rounds=t_rounds)[0].prev_delta, reps=3)
+    rows.append(("rounds_trainer_run", us,
+                 f"T={t_rounds},d={d},ledger=in-graph"))
 
 
 def bench_sharded_round(rows):
     """Sharded cohort round (shard_map over ('pod','data'), DESIGN.md §7)
-    vs the vmapped single-device round, same cfg and key."""
+    vs the vmapped single-device round, same cfg and key, via
+    Trainer.step."""
     import dataclasses
 
     from repro.configs import PFELSConfig
-    from repro.fl import make_round_fn
+    from repro.fl import Trainer
+    from repro.fl.api import replace
     from repro.launch.mesh import make_cohort_mesh
 
     cfg = PFELSConfig(num_clients=30, clients_per_round=8, local_steps=3)
-    params, d, unravel, (x, y), loss_fn, st = _fl_problem(cfg)
+    params, d, _, (x, y), loss_fn, _ = _fl_problem(cfg)
     mesh = make_cohort_mesh(cfg.clients_per_round)
     shards = mesh.shape["pod"] * mesh.shape["data"]
 
-    fn_v = make_round_fn(cfg, loss_fn, d, unravel)
-    us = _time(lambda: fn_v(params, st.power_limits, x, y,
-                            jax.random.PRNGKey(2))[0], reps=3)
+    def _bench(cfg_i, mesh_i):
+        trainer = Trainer(cfg_i, loss_fn, params, mesh=mesh_i)
+        state = replace(trainer.init(jax.random.PRNGKey(1)),
+                        key=jax.random.PRNGKey(2))
+        return _time(lambda: trainer.step(state, x, y)[0].prev_delta,
+                     reps=3)
+
+    us = _bench(cfg, None)
     rows.append(("round_vmapped", us, f"r={cfg.clients_per_round},d={d}"))
 
     cfg_s = dataclasses.replace(cfg, client_sharding="cohort")
-    fn_s = make_round_fn(cfg_s, loss_fn, d, unravel, mesh=mesh)
-    us = _time(lambda: fn_s(params, st.power_limits, x, y,
-                            jax.random.PRNGKey(2))[0], reps=3)
+    us = _bench(cfg_s, mesh)
     rows.append(("round_sharded", us,
                  f"r={cfg.clients_per_round},d={d},shards={shards}"))
 

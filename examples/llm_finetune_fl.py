@@ -7,15 +7,13 @@ transform (clip -> rand_k mask -> power scale -> channel noise).
       --steps 200
 """
 import argparse
-import sys
 import time
-
-sys.path.insert(0, "src")
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ChannelConfig, PFELSConfig, reduced_config
+from repro.configs import PFELSConfig, reduced_config
+from repro.core.channel import scaled_channel
 from repro.data import make_lm_sequences
 from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.launch.steps import make_pfels_train_step
@@ -53,7 +51,7 @@ def main():
     pfels = PFELSConfig(num_clients=1000, clients_per_round=1,
                         compression_ratio=args.p, epsilon=args.epsilon,
                         local_lr=0.1, local_steps=tau,
-                        channel=ChannelConfig(gain_clip=(2e-3, 0.1)))
+                        channel=scaled_channel(d))
     step = make_pfels_train_step(cfg, pfels, d, mesh)
 
     with use_mesh(mesh):

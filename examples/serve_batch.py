@@ -6,9 +6,6 @@ shapes lower).
       --batch 4 --prompt-len 48 --new-tokens 24
 """
 import argparse
-import sys
-
-sys.path.insert(0, "src")
 
 from repro.launch.serve import serve
 

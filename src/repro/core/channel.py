@@ -7,10 +7,29 @@ drawn uniformly in [2, 15] dB (paper sets SNR against the full model dim d).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ChannelConfig
+
+PAPER_D = 9_750_922  # the paper's VGG-11 dimension (§8.1)
+
+
+def scaled_channel(d: int, *, paper_d: int = PAPER_D) -> ChannelConfig:
+    """Fading floor scaled to the paper's operating REGIME at a reduced
+    model dimension d.
+
+    The power cap floor is ``beta_min ~ gain_min * sqrt(d) * sqrt(SNR)``
+    (Eq. 34c with ``P = SNR * d * sigma0^2``), so reproducing the paper's
+    regime at reduced d requires scaling the fading floor by
+    ``sqrt(d_paper / d)`` — otherwise worst-channel rounds inject
+    catastrophically larger relative noise than the paper ever sees. Shared
+    by the examples, ``launch/train.py``, and ``benchmarks/common.py``.
+    """
+    floor = 1e-4 * math.sqrt(paper_d / d)
+    return ChannelConfig(gain_clip=(min(floor, 0.05), 0.1))
 
 
 def sample_gains(key, n: int, cfg: ChannelConfig) -> jnp.ndarray:

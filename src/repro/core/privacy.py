@@ -14,7 +14,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
 
 
 def c2_coefficient(eta: float, tau: int, c1: float, r: int, n: int,
@@ -90,6 +93,64 @@ def pfels_noise_multiplier(beta: float, eta: float, tau: int, c1: float,
     """z = sigma0 / psi with psi the Lemma-2 sensitivity."""
     psi = sensitivity_bound(beta, eta, tau, c1)
     return sigma0 / max(psi, 1e-30)
+
+
+# ---------------------------------------------- in-graph ledger (DESIGN.md §8)
+
+@dataclass
+class LedgerState:
+    """Compiled-state privacy accumulators: the jnp twin of
+    :class:`PrivacyLedger`, carried inside ``TrainState`` so a ``lax.scan``
+    over T rounds (``repro.fl.api.Trainer.run``) returns exact budget totals
+    without T host round-trips.
+
+    ``eps_sum`` backs basic composition (sum over rounds), ``eps_max`` backs
+    the conservative worst-round advanced composition, and ``spends`` counts
+    the rounds actually charged (the per-round delta is a static config
+    value, so ``delta_T = delta * spends``). Empty-ledger contract as in
+    :class:`PrivacyLedger`: all-zero accumulators total to ``(0.0, 0.0)``.
+    """
+    eps_sum: jnp.ndarray   # f32 scalar, sum of per-round eps
+    eps_max: jnp.ndarray   # f32 scalar, worst per-round eps
+    spends: jnp.ndarray    # i32 scalar, number of ledgered rounds
+
+
+jax.tree_util.register_dataclass(
+    LedgerState, data_fields=["eps_sum", "eps_max", "spends"],
+    meta_fields=[])
+
+
+def ledger_init() -> LedgerState:
+    return LedgerState(eps_sum=jnp.zeros((), jnp.float32),
+                       eps_max=jnp.zeros((), jnp.float32),
+                       spends=jnp.zeros((), jnp.int32))
+
+
+def ledger_spend(ledger: LedgerState, eps_round) -> LedgerState:
+    """Charge one round's realized eps (traceable; the in-graph analogue of
+    ``PrivacyLedger.spend``)."""
+    eps_round = jnp.asarray(eps_round, jnp.float32)
+    return LedgerState(eps_sum=ledger.eps_sum + eps_round,
+                       eps_max=jnp.maximum(ledger.eps_max, eps_round),
+                       spends=ledger.spends + 1)
+
+
+def ledger_totals_basic(ledger: LedgerState,
+                        delta: float) -> Tuple[float, float]:
+    """Host-side (eps_T, delta_T) under basic composition — the
+    ``PrivacyLedger.total_basic`` contract from compiled accumulators."""
+    return float(ledger.eps_sum), delta * int(ledger.spends)
+
+
+def ledger_totals_advanced(ledger: LedgerState, delta: float,
+                           delta_prime: float = 1e-6) -> Tuple[float, float]:
+    """Host-side (eps_T, delta_T) under Dwork-Roth advanced composition from
+    the worst round's eps (the ``PrivacyLedger.total_advanced`` contract,
+    including the (0.0, 0.0) empty-ledger case)."""
+    t = int(ledger.spends)
+    if t == 0:
+        return 0.0, 0.0
+    return compose_advanced(float(ledger.eps_max), delta, t, delta_prime)
 
 
 @dataclass

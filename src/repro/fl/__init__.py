@@ -1,7 +1,13 @@
+from repro.core.privacy import LedgerState
+from repro.fl.algorithms import (Algorithm, get_algorithm, list_algorithms,
+                                 register_algorithm, unregister_algorithm)
+from repro.fl.api import Trainer, TrainState
 from repro.fl.client import local_train, model_update
 from repro.fl.rounds import (FLState, evaluate, make_round_fn,
                              make_training_fn, round_epsilon_spent, setup)
 
-__all__ = ["local_train", "model_update", "FLState", "evaluate",
-           "make_round_fn", "make_training_fn", "round_epsilon_spent",
-           "setup"]
+__all__ = ["Algorithm", "LedgerState", "Trainer", "TrainState",
+           "get_algorithm", "list_algorithms", "register_algorithm",
+           "unregister_algorithm", "local_train", "model_update", "FLState",
+           "evaluate", "make_round_fn", "make_training_fn",
+           "round_epsilon_spent", "setup"]

@@ -1,0 +1,198 @@
+"""Pluggable transmit-scheme registry for the FL round (DESIGN.md §8).
+
+Each :class:`Algorithm` entry supplies the three points where the paper's
+schemes actually differ — support selection (which coordinates are
+transmitted), β-design (the per-round power/alignment coefficient), and
+aggregation — plus the per-round privacy spend charged to the in-graph
+ledger. The round body in ``repro.fl.rounds._build_round_core`` is
+otherwise uniform: local training, error feedback, the AirComp machinery
+(unfused / fused Pallas / sharded cohort), metrics, and the server update
+are shared by every entry, so a new transmit scheme is a
+``register_algorithm`` call, not another ``cfg.algorithm`` branch.
+
+Built-in entries reproduce the paper: ``pfels`` (Alg. 2 + Thm 5),
+``wfl_p`` (Eq. 36), ``wfl_pdp`` (Eq. 37), ``dp_fedavg`` (paper Alg. 1),
+``fedavg``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PFELSConfig
+from repro.core import aggregation, power_control, privacy, randk
+
+
+@dataclass(frozen=True)
+class Algorithm:
+    """One transmit scheme.
+
+    ``aircomp=True`` routes the round through the analog AirComp path
+    (support selection -> β-design -> MAC superposition, with the
+    config-selected execution strategy: unfused reference, fused Pallas
+    kernel, or sharded cohort psum); the entry must then provide
+    ``select_support`` and ``design_beta``. ``aircomp=False`` means digital
+    server-side aggregation; the entry must provide ``server_aggregate``.
+
+    Hooks (all trace-safe):
+      select_support(cfg, d, k, prev_delta, key) -> (idx (k_used,), k_used)
+          the transmitted coordinate set omega_t; ``prev_delta`` is the
+          previous round's reconstructed update (zeros on cold start) for
+          server-guided schemes.
+      design_beta(cfg, gains, power_limits, d, k_used) -> scalar beta
+          the per-round alignment coefficient from the GLOBAL (r,) gains
+          and the selected clients' power limits.
+      server_aggregate(cfg, flat_updates, noise_key, *, d, r) -> (d,)
+          digital aggregation of the (r, d) update batch.
+      privacy_spend(cfg, beta) -> scalar eps
+          per-round (eps, cfg.resolved_delta())-DP charge for the realized
+          beta, accumulated by the in-graph ledger. None = the scheme
+          carries no per-round DP guarantee and is never ledgered.
+
+    ``sparsifies_transmit`` tells the error-feedback memory whether the
+    transmitted signal was restricted to the support (residual = the
+    untransmitted coordinates) or dense.
+    """
+    name: str
+    aircomp: bool
+    select_support: Optional[Callable] = None
+    design_beta: Optional[Callable] = None
+    server_aggregate: Optional[Callable] = None
+    privacy_spend: Optional[Callable] = None
+    sparsifies_transmit: bool = False
+
+
+_REGISTRY: Dict[str, Algorithm] = {}
+
+
+def register_algorithm(name: str, alg: Algorithm, *,
+                       overwrite: bool = False) -> Algorithm:
+    """Add a transmit scheme under ``PFELSConfig.algorithm == name``."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"algorithm {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    if alg.aircomp and (alg.select_support is None or alg.design_beta is None):
+        raise ValueError(f"aircomp algorithm {name!r} needs select_support "
+                         f"and design_beta hooks")
+    if not alg.aircomp and alg.server_aggregate is None:
+        raise ValueError(f"non-aircomp algorithm {name!r} needs a "
+                         f"server_aggregate hook")
+    _REGISTRY[name] = alg
+    return alg
+
+
+def unregister_algorithm(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_algorithm(name: str) -> Algorithm:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {name!r}; registered: "
+            f"{sorted(_REGISTRY)} (add new schemes via "
+            f"repro.fl.algorithms.register_algorithm)") from None
+
+
+def list_algorithms():
+    return sorted(_REGISTRY)
+
+
+# ------------------------------------------------------- built-in schemes
+
+def _dp_epsilon_spend(cfg: PFELSConfig, beta):
+    """Per-round eps actually consumed (Thm 3 inverse) for the realized
+    beta, capped at the configured budget — Theorem 5 already enforces
+    ``C2 * beta <= eps``, so the cap only absorbs fp rounding (and matches
+    the host-side ledger convention of the legacy drivers)."""
+    c2 = privacy.c2_coefficient(
+        cfg.local_lr, cfg.local_steps, cfg.clip, cfg.clients_per_round,
+        cfg.num_clients, cfg.resolved_delta(), cfg.channel.noise_std)
+    return jnp.minimum(jnp.float32(c2) * beta, jnp.float32(cfg.epsilon))
+
+
+def _pfels_support(cfg: PFELSConfig, d: int, k: int, prev_delta, key):
+    """rand-k support omega_t; with ``randk_mode="server_topk"`` (beyond
+    paper) half the budget goes to the top coords of |Delta_hat_{t-1}|
+    (shared across clients -> AirComp alignment preserved), half explored
+    uniformly — pure top-k locks its support (coords never transmitted keep
+    |Delta_hat|=0 and are never selected). A zero/absent prev_delta (cold
+    start) falls back to the uniform sample — top_k over |zeros| would
+    deterministically pick coords 0..k1-1, biasing round 1."""
+    if cfg.randk_mode == "server_topk" and prev_delta is not None:
+        def _warm_idx():
+            k1 = k // 2
+            _, idx_top = jax.lax.top_k(jnp.abs(prev_delta), k1)
+            scores = jax.random.uniform(key, (d,))
+            scores = scores.at[idx_top].set(-jnp.inf)
+            _, idx_rand = jax.lax.top_k(scores, k - k1)
+            return jnp.concatenate([idx_top, idx_rand])
+
+        idx = jax.lax.cond(
+            jnp.linalg.norm(prev_delta) > 0, _warm_idx,
+            lambda: randk.sample_indices(key, d, k))
+    else:
+        idx = randk.sample_indices(key, d, k)
+    return idx, k
+
+
+def _full_support(cfg: PFELSConfig, d: int, k: int, prev_delta, key):
+    """Full-update baselines transmit every coordinate (k = d)."""
+    return jnp.arange(d), d
+
+
+def _pfels_beta(cfg: PFELSConfig, gains, power_limits, d: int, k: int):
+    return power_control.beta_pfels(
+        gains, power_limits, d=d, k=k, c1=cfg.clip, eta=cfg.local_lr,
+        tau=cfg.local_steps, epsilon=cfg.epsilon,
+        r=cfg.clients_per_round, n=cfg.num_clients,
+        delta=cfg.resolved_delta(), sigma0=cfg.channel.noise_std)
+
+
+def _wfl_p_beta(cfg: PFELSConfig, gains, power_limits, d: int, k: int):
+    return power_control.beta_wfl_p(
+        gains, power_limits, c1=cfg.clip, eta=cfg.local_lr,
+        tau=cfg.local_steps)
+
+
+def _wfl_pdp_beta(cfg: PFELSConfig, gains, power_limits, d: int, k: int):
+    return power_control.beta_wfl_pdp(
+        gains, power_limits, c1=cfg.clip, eta=cfg.local_lr,
+        tau=cfg.local_steps, epsilon=cfg.epsilon,
+        r=cfg.clients_per_round, n=cfg.num_clients,
+        delta=cfg.resolved_delta(), sigma0=cfg.channel.noise_std)
+
+
+def _dp_fedavg_aggregate(cfg: PFELSConfig, flat_updates, noise_key, *,
+                         d: int, r: int):
+    return aggregation.dp_fedavg_aggregate(
+        flat_updates, cfg.clip, cfg.dp_fedavg_sigma, noise_key, r=r)
+
+
+def _fedavg_aggregate(cfg: PFELSConfig, flat_updates, noise_key, *,
+                      d: int, r: int):
+    return aggregation.fedavg_aggregate(flat_updates)
+
+
+register_algorithm("pfels", Algorithm(
+    name="pfels", aircomp=True, select_support=_pfels_support,
+    design_beta=_pfels_beta, privacy_spend=_dp_epsilon_spend,
+    sparsifies_transmit=True))
+
+register_algorithm("wfl_p", Algorithm(
+    name="wfl_p", aircomp=True, select_support=_full_support,
+    design_beta=_wfl_p_beta))
+
+register_algorithm("wfl_pdp", Algorithm(
+    name="wfl_pdp", aircomp=True, select_support=_full_support,
+    design_beta=_wfl_pdp_beta, privacy_spend=_dp_epsilon_spend))
+
+register_algorithm("dp_fedavg", Algorithm(
+    name="dp_fedavg", aircomp=False, server_aggregate=_dp_fedavg_aggregate))
+
+register_algorithm("fedavg", Algorithm(
+    name="fedavg", aircomp=False, server_aggregate=_fedavg_aggregate))

@@ -1,0 +1,217 @@
+"""The public FL training API: ``Trainer`` + ``TrainState`` (DESIGN.md §8).
+
+One object owns the compiled round machinery (``Trainer``) and one
+registered pytree owns ALL loop state (``TrainState``): params as a pytree
+(ravel/unravel is an internal detail), the error-feedback residual memory,
+the previous round's reconstructed update ``prev_delta`` (the server_topk
+support source — previously smuggled through the metrics dict), the
+per-device power limits, the PRNG key, the round counter, and the in-graph
+privacy ledger (``repro.core.privacy.LedgerState``), whose (ε, δ)
+accumulators are updated INSIDE the compiled program from the realized
+per-round β — so ``Trainer.run`` (the ``lax.scan`` path) returns exact
+budget totals without T host round-trips, and chunked resume carries the
+ledger automatically.
+
+``Trainer.step(state, data_x, data_y) -> (state, metrics)`` and
+``Trainer.run(state, data_x, data_y, rounds=T) -> (state, stacked_metrics)``
+have one fixed signature and return shape regardless of config — no
+``error_feedback`` 3-tuples, no ``delta_hat`` metrics key. Algorithms come
+from the ``repro.fl.algorithms`` registry, so new transmit schemes plug in
+as entries, not branches.
+
+PRNG contract (also in DESIGN.md §8): ``state.key`` is the key the next
+call consumes. ``step`` uses it whole as the round key and advances it by
+``fold_in(key, 1)`` — bit-identical to the legacy
+``make_round_fn(..., key=state.key)``. ``run(T)`` splits it into T round
+keys (``jax.random.split(state.key, T)``) and advances by
+``fold_in(key, T)`` — bit-identical to the legacy ``make_training_fn``
+scan. The two schedules intentionally match their legacy counterparts, so
+``run(T)`` is NOT bitwise T repetitions of ``step`` (both are valid
+independent streams).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh
+
+from repro.configs.base import PFELSConfig
+from repro.core import privacy
+from repro.fl import algorithms, rounds
+
+# init derives the round-key stream by folding this tag into the init key,
+# so power-limit sampling and the training stream never share a key
+_RUN_STREAM_TAG = 0x5047  # "PG"
+
+
+@dataclass
+class TrainState:
+    """All state of the Alg. 2 server loop, as one registered pytree.
+
+    Donate-safe and scan-carry-safe: every field is an array (or params
+    pytree), so checkpointing, ``lax.scan``, and chunked resume carry the
+    whole loop — including the privacy ledger — with no host-side
+    bookkeeping. ``residuals`` is None unless ``cfg.error_feedback``;
+    ``prev_delta`` starts at zeros (the documented server_topk cold start).
+    """
+    params: Any                       # model pytree
+    power_limits: jnp.ndarray         # (N,) P_i, fixed per device
+    residuals: Optional[jnp.ndarray]  # (N, d) error-feedback memory or None
+    prev_delta: jnp.ndarray           # (d,) last reconstructed Delta_hat
+    key: jnp.ndarray                  # PRNG key the NEXT step/run consumes
+    round: jnp.ndarray                # i32 scalar, rounds completed
+    ledger: privacy.LedgerState       # in-graph (eps, delta) accumulators
+
+
+jax.tree_util.register_dataclass(
+    TrainState,
+    data_fields=["params", "power_limits", "residuals", "prev_delta",
+                 "key", "round", "ledger"],
+    meta_fields=[])
+
+
+class Trainer:
+    """Compiled Alg. 2 server loop over a registry algorithm.
+
+    ``Trainer(cfg, loss_fn, params_template, mesh=None)``:
+
+    - ``cfg``: :class:`PFELSConfig`; ``cfg.algorithm`` is resolved through
+      ``repro.fl.algorithms.get_algorithm``.
+    - ``loss_fn(params, {"x","y"}) -> (loss, aux)``.
+    - ``params_template``: a concrete params pytree — defines the flat
+      dimension ``d`` and the unravel mapping internally, and is the
+      default initial params for :meth:`init`.
+    - ``mesh``: cohort mesh for ``cfg.client_sharding="cohort"``
+      (``None`` builds ``make_cohort_mesh(cfg.clients_per_round)``).
+
+    ``step`` is a jitted callable attribute (so ``trainer.step.lower(...)``
+    works for dry-runs); ``run`` jits one program per distinct T.
+    """
+
+    def __init__(self, cfg: PFELSConfig, loss_fn: Callable,
+                 params_template: Any, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.loss_fn = loss_fn
+        self.algorithm = algorithms.get_algorithm(cfg.algorithm)
+        flat, unravel = ravel_pytree(params_template)
+        self.d = int(flat.shape[0])
+        self.unravel = unravel
+        self._params_template = params_template
+        self.mesh = rounds._resolve_cohort_mesh(cfg, mesh)
+        self._core = rounds._build_round_core(cfg, loss_fn, self.d, unravel,
+                                              self.mesh)
+        self.step = jax.jit(self._step_impl)
+        self._run_cache: Dict[int, Callable] = {}
+
+    # ------------------------------------------------------------- state
+
+    def init(self, key, params: Any = None) -> TrainState:
+        """Fresh TrainState: power limits drawn from ``key`` (the same draw
+        as the legacy ``setup``), zeroed ledger/residuals/prev_delta, and
+        the round-key stream forked off ``key`` (never reusing the
+        power-limit draw)."""
+        params = self._params_template if params is None else params
+        res = (jnp.zeros((self.cfg.num_clients, self.d), jnp.float32)
+               if self.cfg.error_feedback else None)
+        return TrainState(
+            params=params,
+            power_limits=rounds.init_power_limits(key, self.cfg, self.d),
+            residuals=res,
+            prev_delta=jnp.zeros((self.d,), jnp.float32),
+            key=jax.random.fold_in(key, _RUN_STREAM_TAG),
+            round=jnp.zeros((), jnp.int32),
+            ledger=privacy.ledger_init())
+
+    def _advance(self, state: TrainState, n: int, params, residuals,
+                 prev_delta, ledger) -> TrainState:
+        return TrainState(
+            params=params, power_limits=state.power_limits,
+            residuals=residuals, prev_delta=prev_delta,
+            key=jax.random.fold_in(state.key, n),
+            round=state.round + n, ledger=ledger)
+
+    def _spend(self, ledger, metrics):
+        """Ledger update + the uniform ``eps_round`` metric. Whether the
+        algorithm spends budget is static config, so non-DP schemes carry
+        the ledger through untouched (their totals stay (0.0, 0.0) — the
+        empty-ledger contract)."""
+        if self.algorithm.privacy_spend is None:
+            eps_round = jnp.zeros((), jnp.float32)
+        else:
+            eps_round = jnp.asarray(
+                self.algorithm.privacy_spend(self.cfg, metrics["beta"]),
+                jnp.float32)
+            ledger = privacy.ledger_spend(ledger, eps_round)
+        return ledger, dict(metrics, eps_round=eps_round)
+
+    # ------------------------------------------------------------- loops
+
+    def _step_impl(self, state: TrainState, data_x, data_y):
+        new_params, metrics, new_res, delta_hat = self._core(
+            state.params, state.power_limits, data_x, data_y, state.key,
+            state.residuals, state.prev_delta)
+        ledger, metrics = self._spend(state.ledger, metrics)
+        return self._advance(state, 1, new_params, new_res, delta_hat,
+                             ledger), metrics
+
+    def run(self, state: TrainState, data_x, data_y,
+            rounds: Optional[int] = None):
+        """T rounds as ONE ``lax.scan`` program (T defaults to
+        ``cfg.rounds``). Returns ``(state, metrics)`` with every metrics
+        leaf stacked over the T rounds (leading axis T). Chunked resume is
+        just calling ``run`` again with the returned state — residuals,
+        server_topk support, PRNG stream, and the privacy ledger all carry
+        in ``TrainState``."""
+        t = self.cfg.rounds if rounds is None else int(rounds)
+        fn = self._run_cache.get(t)
+        if fn is None:
+            fn = jax.jit(lambda s, x, y: self._run_impl(s, x, y, t))
+            self._run_cache[t] = fn
+        return fn(state, data_x, data_y)
+
+    def _run_impl(self, state: TrainState, data_x, data_y, t_rounds: int):
+        def body(carry, round_key):
+            p, res, prev, ledger = carry
+            p2, metrics, res2, delta_hat = self._core(
+                p, state.power_limits, data_x, data_y, round_key, res, prev)
+            ledger, metrics = self._spend(ledger, metrics)
+            return (p2, res2, delta_hat, ledger), metrics
+
+        keys = jax.random.split(state.key, t_rounds)
+        (p_f, res_f, delta_f, ledger_f), metrics = jax.lax.scan(
+            body, (state.params, state.residuals, state.prev_delta,
+                   state.ledger), keys)
+        return self._advance(state, t_rounds, p_f, res_f, delta_f,
+                             ledger_f), metrics
+
+    # ------------------------------------------------------- conveniences
+
+    def ledger_totals(self, state: TrainState,
+                      delta_prime: float = 1e-6) -> Dict[str, Any]:
+        """Host-side (eps_T, delta_T) report from the in-graph ledger,
+        matching the legacy ``PrivacyLedger`` contract."""
+        delta = self.cfg.resolved_delta()
+        return {
+            "basic": privacy.ledger_totals_basic(state.ledger, delta),
+            "advanced": privacy.ledger_totals_advanced(state.ledger, delta,
+                                                       delta_prime),
+            "eps_max_round": float(state.ledger.eps_max),
+            "spends": int(state.ledger.spends),
+        }
+
+    def evaluate(self, state: TrainState, xt, yt, batch: int = 256):
+        """(test_loss, test_accuracy) of ``state.params`` — thin wrapper
+        over :func:`repro.fl.rounds.evaluate`."""
+        return rounds.evaluate(state.params, self.loss_fn, xt, yt,
+                               batch=batch)
+
+
+def replace(state: TrainState, **kw) -> TrainState:
+    """``dataclasses.replace`` re-export for ergonomic state surgery
+    (tests pin ``key=``; checkpoint restore swaps ``params=``)."""
+    return dataclasses.replace(state, **kw)

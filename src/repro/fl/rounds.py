@@ -25,6 +25,7 @@ numerically aligned with the vmapped single-device path:
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional
 
@@ -34,13 +35,13 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import PFELSConfig
-from repro.core import aggregation, channel, power_control, privacy, randk
+from repro.core import aggregation, channel, privacy, randk
+from repro.fl import algorithms
 from repro.fl.client import local_train, model_update
 from repro.kernels.pfels_transmit import ref as transmit_ref
 from repro.launch.mesh import make_cohort_mesh, shard_map_compat
 from repro.sharding import rules
 
-_AIRCOMP_ALGS = ("pfels", "wfl_p", "wfl_pdp")
 _COHORT_AXES = ("pod", "data")
 
 
@@ -53,10 +54,25 @@ class FLState:
 
 
 def setup(key, params, cfg: PFELSConfig, d: int) -> FLState:
-    p_lim = channel.sample_power_limits(key, cfg.num_clients, d, cfg.channel)
+    """DEPRECATED legacy state factory — prefer
+    ``repro.fl.Trainer(cfg, loss_fn, params).init(key)``, which returns a
+    :class:`repro.fl.api.TrainState` owning ALL loop state (params,
+    residuals, prev_delta, PRNG key, in-graph privacy ledger). This shim
+    draws the same power limits from the same key and survives only for the
+    golden-parity tests."""
+    warnings.warn(
+        "repro.fl.setup is deprecated; use repro.fl.Trainer(...).init(key) "
+        "(DESIGN.md §8)", DeprecationWarning, stacklevel=2)
+    p_lim = init_power_limits(key, cfg, d)
     res = (jnp.zeros((cfg.num_clients, d), jnp.float32)
            if cfg.error_feedback else None)
     return FLState(params=params, power_limits=p_lim, residuals=res)
+
+
+def init_power_limits(key, cfg: PFELSConfig, d: int) -> jnp.ndarray:
+    """(N,) per-device power limits P_i — the one draw shared by the legacy
+    ``setup`` and ``Trainer.init`` (same key => same limits)."""
+    return channel.sample_power_limits(key, cfg.num_clients, d, cfg.channel)
 
 
 def _resolve_cohort_mesh(cfg: PFELSConfig,
@@ -95,11 +111,10 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
     multi-device `mesh`, the per-client pipeline is shard_mapped over the
     cohort axis (module docstring)."""
     k_coords = max(int(round(cfg.compression_ratio * d)), 1)
-    alg = cfg.algorithm
-    delta = cfg.resolved_delta()
+    alg = algorithms.get_algorithm(cfg.algorithm)
     sigma0 = cfg.channel.noise_std
     r = cfg.clients_per_round
-    aircomp = alg in _AIRCOMP_ALGS
+    aircomp = alg.aircomp
     n_shards = _cohort_shards(cfg, mesh)
 
     train = functools.partial(
@@ -116,48 +131,12 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         return flat, losses
 
     def support_and_beta(gains, p_sel, prev_delta, idx_key):
-        """rand-k support omega_t + Theorem-5 power control, from the
-        GLOBAL (r,) gains — shared by both execution paths."""
-        if alg == "pfels":
-            if cfg.randk_mode == "server_topk" and prev_delta is not None:
-                # server-guided top-k (beyond paper): half the budget on
-                # the top coords of |Delta_hat_{t-1}| (shared across
-                # clients -> AirComp alignment preserved), half explored
-                # uniformly — pure top-k locks its support (coords never
-                # transmitted keep |Delta_hat|=0 and are never selected).
-                # A zero prev_delta (the scan driver's cold start) falls
-                # back to the uniform sample — top_k over |zeros| would
-                # deterministically pick coords 0..k1-1, biasing round 1.
-                def _warm_idx():
-                    k1 = k_coords // 2
-                    _, idx_top = jax.lax.top_k(jnp.abs(prev_delta), k1)
-                    scores = jax.random.uniform(idx_key, (d,))
-                    scores = scores.at[idx_top].set(-jnp.inf)
-                    _, idx_rand = jax.lax.top_k(scores, k_coords - k1)
-                    return jnp.concatenate([idx_top, idx_rand])
-
-                idx = jax.lax.cond(
-                    jnp.linalg.norm(prev_delta) > 0, _warm_idx,
-                    lambda: randk.sample_indices(idx_key, d, k_coords))
-            else:
-                idx = randk.sample_indices(idx_key, d, k_coords)
-            beta = power_control.beta_pfels(
-                gains, p_sel, d=d, k=k_coords, c1=cfg.clip,
-                eta=cfg.local_lr, tau=cfg.local_steps,
-                epsilon=cfg.epsilon, r=r, n=cfg.num_clients,
-                delta=delta, sigma0=sigma0)
-            return idx, beta, k_coords
-        idx = jnp.arange(d)
-        if alg == "wfl_p":
-            beta = power_control.beta_wfl_p(
-                gains, p_sel, c1=cfg.clip, eta=cfg.local_lr,
-                tau=cfg.local_steps)
-        else:
-            beta = power_control.beta_wfl_pdp(
-                gains, p_sel, c1=cfg.clip, eta=cfg.local_lr,
-                tau=cfg.local_steps, epsilon=cfg.epsilon, r=r,
-                n=cfg.num_clients, delta=delta, sigma0=sigma0)
-        return idx, beta, d
+        """Registry hooks: support omega_t + β-design, from the GLOBAL (r,)
+        gains — shared by both execution paths."""
+        idx, k_used = alg.select_support(cfg, d, k_coords, prev_delta,
+                                         idx_key)
+        beta = alg.design_beta(cfg, gains, p_sel, d, k_used)
+        return idx, beta, k_used
 
     cohort_apply = None
     if n_shards > 1:
@@ -284,13 +263,9 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                     clip=agg_clip)
             metrics.update(beta=beta, energy=energy,
                            subcarriers=jnp.asarray(k_used))
-        elif alg == "dp_fedavg":
-            delta_hat = aggregation.dp_fedavg_aggregate(
-                flat_updates, cfg.clip, cfg.dp_fedavg_sigma, ks[4], r=r)
-            metrics.update(beta=jnp.asarray(0.0), energy=jnp.asarray(0.0),
-                           subcarriers=jnp.asarray(d))
-        else:  # fedavg
-            delta_hat = aggregation.fedavg_aggregate(flat_updates)
+        else:   # digital server-side aggregation (registry hook)
+            delta_hat = alg.server_aggregate(cfg, flat_updates, ks[4],
+                                             d=d, r=r)
             metrics.update(beta=jnp.asarray(0.0), energy=jnp.asarray(0.0),
                            subcarriers=jnp.asarray(d))
 
@@ -300,7 +275,7 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         # in the residual memory too
         new_residuals = residuals
         if cfg.error_feedback and residuals is not None:
-            if alg == "pfels":
+            if alg.sparsifies_transmit:
                 transmitted = jax.vmap(
                     lambda u: randk.sparsify(u, idx, d))(flat_updates)
             else:
@@ -320,29 +295,51 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
     return round_core
 
 
+def _legacy_trainer(cfg: PFELSConfig, loss_fn: Callable, d: int,
+                    unravel: Callable, mesh: Optional[Mesh]):
+    """The Trainer a legacy shim delegates to (lazy import: api.py imports
+    this module for the round core)."""
+    from repro.fl.api import Trainer
+    return Trainer(cfg, loss_fn, unravel(jnp.zeros((d,), jnp.float32)),
+                   mesh=mesh)
+
+
 def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
                   unravel: Callable, mesh: Optional[Mesh] = None):
-    """Builds the jitted single-round function.
+    """DEPRECATED legacy single-round entry — a thin shim over
+    :class:`repro.fl.api.Trainer` (``Trainer.step`` is the replacement; it
+    has ONE signature and return shape regardless of config). Kept
+    bit-identical under the same key for the golden-parity tests.
 
     loss_fn(params, {"x","y"}) -> (loss, aux). d = flat dim; unravel maps a
     flat (d,) vector back to the params pytree. Returns
     ``(params, metrics)`` or, with ``cfg.error_feedback``,
-    ``(params, metrics, residuals)``.
+    ``(params, metrics, residuals)`` — the config-dependent arity the new
+    API removes.
 
     ``mesh``: cohort mesh for ``cfg.client_sharding="cohort"`` (defaults to
     ``make_cohort_mesh(cfg.clients_per_round)`` over the visible devices);
     ignored with ``client_sharding="none"``.
     """
-    mesh = _resolve_cohort_mesh(cfg, mesh)
-    core = _build_round_core(cfg, loss_fn, d, unravel, mesh)
+    warnings.warn(
+        "repro.fl.make_round_fn is deprecated; use repro.fl.Trainer.step "
+        "(DESIGN.md §8)", DeprecationWarning, stacklevel=2)
+    trainer = _legacy_trainer(cfg, loss_fn, d, unravel, mesh)
+    core = trainer._core
+    leaks_delta_hat = (cfg.randk_mode == "server_topk"
+                       and trainer.algorithm.aircomp)
+    if leaks_delta_hat:
+        warnings.warn(
+            "the 'delta_hat' metrics key is deprecated (it stacks to a "
+            "(T, d) buffer under scan); read TrainState.prev_delta from "
+            "Trainer.step/run instead", DeprecationWarning, stacklevel=2)
 
     def round_fn(params, power_limits, data_x, data_y, key,
                  residuals=None, prev_delta=None):
         new_params, metrics, new_residuals, delta_hat = core(
             params, power_limits, data_x, data_y, key, residuals,
             prev_delta)
-        if (cfg.randk_mode == "server_topk"
-                and cfg.algorithm in _AIRCOMP_ALGS):
+        if leaks_delta_hat:
             metrics["delta_hat"] = delta_hat  # seed-era consumer contract
         if cfg.error_feedback:
             return new_params, metrics, new_residuals
@@ -354,23 +351,26 @@ def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
 def make_training_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
                      unravel: Callable, rounds: Optional[int] = None,
                      mesh: Optional[Mesh] = None):
-    """Builds a jitted T-round driver: one ``lax.scan`` over rounds in a
-    single compiled program, carrying ``(params, residuals, prev_delta)``
-    state — long simulations stop paying per-round dispatch/retrace
-    overhead.
+    """DEPRECATED legacy T-round ``lax.scan`` driver — a thin shim over
+    :class:`repro.fl.api.Trainer` (``Trainer.run`` is the replacement: same
+    one-program scan, plus the in-graph privacy ledger and automatic
+    chunked-resume state). Kept bit-identical under the same key for the
+    golden-parity tests.
 
     Returns ``training_fn(params, power_limits, data_x, data_y, key,
     residuals=None, prev_delta=None) -> (params_T, metrics_T, residuals_T,
     delta_T)`` where every ``metrics_T`` leaf is stacked over the T rounds
     (leading axis T) and ``delta_T`` is the last round's reconstructed
     update — feed it (and ``residuals_T``) back in to resume chunked
-    training without resetting the server_topk support or the
-    error-feedback memory. ``rounds`` defaults to ``cfg.rounds``; ``mesh``
-    as in :func:`make_round_fn`.
+    training. ``rounds`` defaults to ``cfg.rounds``; ``mesh`` as in
+    :func:`make_round_fn`.
     """
+    warnings.warn(
+        "repro.fl.make_training_fn is deprecated; use repro.fl.Trainer.run "
+        "(DESIGN.md §8)", DeprecationWarning, stacklevel=2)
     t_rounds = cfg.rounds if rounds is None else rounds
-    mesh = _resolve_cohort_mesh(cfg, mesh)
-    core = _build_round_core(cfg, loss_fn, d, unravel, mesh)
+    trainer = _legacy_trainer(cfg, loss_fn, d, unravel, mesh)
+    core = trainer._core
 
     def training_fn(params, power_limits, data_x, data_y, key,
                     residuals=None, prev_delta=None):

@@ -222,21 +222,18 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def dryrun_cohort(*, clients_per_round: int = 32, verbose: bool = True):
     """Lower + compile the sharded FL round (client_sharding="cohort",
-    DESIGN.md §7) on a cohort mesh carved from the forced host devices:
-    sanity-checks that the shard_map round lowers at pod scale and records
-    its compile/memory numbers like the model dry-runs."""
-    from jax.flatten_util import ravel_pytree
-
+    DESIGN.md §7) through the Trainer API on a cohort mesh carved from the
+    forced host devices: sanity-checks that the shard_map round lowers at
+    pod scale and records its compile/memory numbers like the model
+    dry-runs."""
     from repro.configs.paper_models import BENCH_MLP
     from repro.data import make_federated_classification
-    from repro.fl import make_round_fn, setup
+    from repro.fl import Trainer
     from repro.launch.mesh import make_cohort_mesh
     from repro.models import cnn
 
     key = jax.random.PRNGKey(0)
     params = cnn.init_cnn(key, BENCH_MLP)
-    flat, unravel = ravel_pytree(params)
-    d = flat.shape[0]
     x, y, _, _ = make_federated_classification(
         key, n_clients=1000, per_client=30, num_classes=10,
         image_shape=(1, 8, 8))
@@ -245,11 +242,12 @@ def dryrun_cohort(*, clients_per_round: int = 32, verbose: bool = True):
                       local_steps=1, client_sharding="cohort")
     mesh = make_cohort_mesh(cfg.clients_per_round)
     shards = mesh.shape["pod"] * mesh.shape["data"]
-    st = setup(jax.random.PRNGKey(1), params, cfg, d)
+    trainer = Trainer(cfg, loss_fn, params, mesh=mesh)
+    d = trainer.d
+    state = trainer.init(jax.random.PRNGKey(1))
 
     t0 = time.time()
-    fn = make_round_fn(cfg, loss_fn, d, unravel, mesh=mesh)
-    lowered = fn.lower(params, st.power_limits, x, y, jax.random.PRNGKey(2))
+    lowered = trainer.step.lower(state, x, y)
     compiled = lowered.compile()
     t1 = time.time()
     mem = compiled.memory_analysis()

@@ -2,7 +2,10 @@
 
 Two modes:
   - ``simulation`` (default): the faithful paper set-up — N simulated edge
-    devices, r sampled per round, exact rand_k + AirComp channel (repro.fl).
+    devices, r sampled per round, exact rand_k + AirComp channel, driven
+    through the unified ``repro.fl.Trainer`` API (each evaluation chunk is
+    one compiled ``lax.scan`` program; the (ε, δ) ledger lives inside the
+    compiled ``TrainState``).
   - ``production``: PFELS-as-distributed-optimizer over the mesh (pods =
     clients; DESIGN.md §3), for LLM-scale training on real hardware.
 
@@ -17,30 +20,28 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
-from jax.flatten_util import ravel_pytree
 
 from repro.configs.base import PFELSConfig
 from repro.configs.paper_models import BENCH_MLP, BENCH_CNN_CIFAR
-from repro.core import privacy
+from repro.core.channel import scaled_channel
+from repro.fl import Trainer, list_algorithms
 from repro.data import make_federated_classification
-from repro.fl import evaluate, make_round_fn, round_epsilon_spent, setup
 from repro.models import cnn
 
 
 def run_simulation(args):
+    model_cfg = BENCH_CNN_CIFAR if args.model == "cnn" else BENCH_MLP
+    key = jax.random.PRNGKey(args.seed)
+    params = cnn.init_cnn(key, model_cfg)
+    d = sum(p.size for p in jax.tree.leaves(params))
     cfg = PFELSConfig(
         num_clients=args.clients, clients_per_round=args.sampled,
         local_steps=args.tau, local_lr=args.lr, clip=args.clip,
         compression_ratio=args.p, epsilon=args.epsilon,
         rounds=args.rounds, momentum=args.momentum,
         algorithm=args.algorithm,
-        dp_fedavg_sigma=args.dp_sigma)
-    model_cfg = BENCH_CNN_CIFAR if args.model == "cnn" else BENCH_MLP
-    key = jax.random.PRNGKey(args.seed)
-    params = cnn.init_cnn(key, model_cfg)
-    flat, unravel = ravel_pytree(params)
-    d = flat.shape[0]
+        dp_fedavg_sigma=args.dp_sigma,
+        channel=scaled_channel(d))
     x, y, xt, yt = make_federated_classification(
         key, n_clients=cfg.num_clients, per_client=args.per_client,
         num_classes=model_cfg.num_classes,
@@ -48,36 +49,32 @@ def run_simulation(args):
                      model_cfg.image_size),
         alpha=args.dirichlet_alpha)
     loss_fn = lambda p, b: cnn.cnn_loss(p, model_cfg, b)
-    state = setup(key, params, cfg, d)
-    round_fn = make_round_fn(cfg, loss_fn, d, unravel)
-    ledger = privacy.PrivacyLedger(n=cfg.num_clients,
-                                   delta=cfg.resolved_delta())
+    trainer = Trainer(cfg, loss_fn, params)
+    state = trainer.init(key)
     history = []
-    p = params
     energy_total = 0.0
     t0 = time.time()
-    for t in range(cfg.rounds):
-        p, m = round_fn(p, state.power_limits, x, y,
-                        jax.random.fold_in(key, 1000 + t))
-        energy_total += float(m["energy"])
-        if cfg.algorithm in ("pfels", "wfl_pdp"):
-            ledger.spend(min(round_epsilon_spent(cfg, float(m["beta"])),
-                             cfg.epsilon))
-        if t % args.eval_every == 0 or t == cfg.rounds - 1:
-            tl, acc = evaluate(p, loss_fn, xt, yt)
-            history.append({"round": t, "train_loss": float(m["train_loss"]),
-                            "test_acc": acc, "energy_cum": energy_total,
-                            "subcarriers": int(m["subcarriers"])})
-            print(f"[{cfg.algorithm}] round {t:4d} loss="
-                  f"{float(m['train_loss']):.3f} acc={acc:.3f} "
-                  f"energy={energy_total:.3e}", flush=True)
+    while int(state.round) < cfg.rounds:
+        chunk = min(args.eval_every, cfg.rounds - int(state.round))
+        state, m = trainer.run(state, x, y, rounds=chunk)
+        energy_total += float(m["energy"].sum())
+        tl, acc = trainer.evaluate(state, xt, yt)
+        history.append({"round": int(state.round) - 1,
+                        "train_loss": float(m["train_loss"][-1]),
+                        "test_acc": acc, "energy_cum": energy_total,
+                        "subcarriers": int(m["subcarriers"][-1])})
+        print(f"[{cfg.algorithm}] round {int(state.round) - 1:4d} loss="
+              f"{float(m['train_loss'][-1]):.3f} acc={acc:.3f} "
+              f"energy={energy_total:.3e}", flush=True)
+    totals = trainer.ledger_totals(state)
     out = {"config": {"algorithm": cfg.algorithm, "epsilon": cfg.epsilon,
                       "p": cfg.compression_ratio, "rounds": cfg.rounds,
                       "clients": cfg.num_clients, "d": d},
            "history": history,
            "energy_total": energy_total,
-           "privacy": {"per_round_eps_max": max(ledger.eps_rounds or [0.0]),
-                       "basic_composition": ledger.total_basic()},
+           "privacy": {"per_round_eps_max": totals["eps_max_round"],
+                       "basic_composition": totals["basic"],
+                       "advanced_composition": totals["advanced"]},
            "wall_s": time.time() - t0}
     if args.out:
         with open(args.out, "w") as f:
@@ -90,8 +87,7 @@ def main():
     ap.add_argument("--mode", default="simulation",
                     choices=["simulation"])
     ap.add_argument("--algorithm", default="pfels",
-                    choices=["pfels", "wfl_p", "wfl_pdp", "dp_fedavg",
-                             "fedavg"])
+                    choices=list_algorithms())
     ap.add_argument("--model", default="mlp", choices=["mlp", "cnn"])
     ap.add_argument("--clients", type=int, default=100)
     ap.add_argument("--sampled", type=int, default=16)

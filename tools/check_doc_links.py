@@ -7,8 +7,10 @@ Two checks, both against the repo root this file lives under:
    README.md (backticked tokens that look like paths with a known
    extension) resolves to a real file — tried verbatim, under src/, and
    under src/repro/.
-2. Every ``DESIGN.md §N`` citation in the Python sources resolves to a
-   real ``## N.`` section of DESIGN.md.
+2. Every ``DESIGN.md §N`` citation — in the Python sources across src/,
+   tests/, benchmarks/, examples/, and tools/, AND in the markdown docs
+   themselves (where the citation may be written ``DESIGN.md`` §N) —
+   resolves to a real ``## N.`` section of DESIGN.md.
 
 Exit status 0 when clean; prints one line per problem otherwise.
 """
@@ -23,8 +25,11 @@ DOCS = ["DESIGN.md", os.path.join("docs", "paper_map.md"), "README.md"]
 EXTS = (".py", ".md", ".yml", ".yaml", ".ini", ".json", ".toml")
 # backticked `path/to/file.ext` (optionally with a :line or trailing /)
 _PATH_RE = re.compile(r"`([A-Za-z0-9_./-]+?)/?(?::\d+)?`")
-_SECTION_RE = re.compile(r"DESIGN\.md\s*§(\d+)")
+# optional closing backtick: markdown writes the citation `DESIGN.md` §N
+_SECTION_RE = re.compile(r"DESIGN\.md`?\s*§(\d+)")
 _HEADING_RE = re.compile(r"^##\s+(\d+)\.", re.M)
+# python trees + markdown docs scanned for DESIGN §N citations
+_CITATION_PY_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
 
 
 def _basenames():
@@ -76,22 +81,30 @@ def check_doc_paths():
 
 
 def check_design_sections():
-    """-> list of unresolved 'DESIGN.md §N' citations in src/**.py."""
+    """-> list of unresolved 'DESIGN.md §N' citations across the python
+    trees (src/tests/benchmarks/examples/tools) and the markdown docs."""
     design = os.path.join(ROOT, "DESIGN.md")
     sections = (set(_HEADING_RE.findall(open(design).read()))
                 if os.path.exists(design) else set())
+
+    def cited_files():
+        for sub in _CITATION_PY_DIRS:
+            for dirpath, _, files in os.walk(os.path.join(ROOT, sub)):
+                for fname in files:
+                    if fname.endswith(".py"):
+                        yield os.path.join(dirpath, fname)
+        for doc in DOCS:
+            if os.path.exists(os.path.join(ROOT, doc)):
+                yield os.path.join(ROOT, doc)
+
     problems = []
-    for dirpath, _, files in os.walk(os.path.join(ROOT, "src")):
-        for fname in files:
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(dirpath, fname)
-            for n in _SECTION_RE.findall(open(path).read()):
-                if n not in sections:
-                    rel = os.path.relpath(path, ROOT)
-                    problems.append(
-                        f"{rel}: cites DESIGN.md §{n} but DESIGN.md has no "
-                        f"'## {n}.' section")
+    for path in cited_files():
+        for n in _SECTION_RE.findall(open(path).read()):
+            if n not in sections:
+                rel = os.path.relpath(path, ROOT)
+                problems.append(
+                    f"{rel}: cites DESIGN.md §{n} but DESIGN.md has no "
+                    f"'## {n}.' section")
     return problems
 
 
