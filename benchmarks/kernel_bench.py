@@ -125,6 +125,48 @@ def bench_round_drivers(rows, *, t_rounds=8):
                  f"T={t_rounds},d={d},ledger=in-graph"))
 
 
+def bench_bank_backends(rows, *, t_rounds=6):
+    """ClientBank backends (DESIGN.md §10), same cfg/key/data: the
+    resident scan (dense (n, d) bank in the carry) vs the streamed
+    host-driven cohort loop (host bank + prefetched (r, ...) slices).
+    The two are bit-identical; this row prices the host round-trips the
+    streamed backend pays for device memory independent of n."""
+    import dataclasses
+
+    import numpy as np
+    from jax.flatten_util import ravel_pytree
+
+    from repro.configs import PFELSConfig
+    from repro.configs.paper_models import BENCH_MLP
+    from repro.data import make_federated_classification
+    from repro.fl import Trainer
+    from repro.fl.api import replace
+    from repro.models import cnn
+
+    cfg = PFELSConfig(num_clients=200, clients_per_round=8, local_steps=3,
+                      error_feedback=True, rounds=t_rounds)
+    params = cnn.init_cnn(jax.random.PRNGKey(0), BENCH_MLP)
+    d = ravel_pytree(params)[0].shape[0]
+    loss_fn = lambda p, b: cnn.cnn_loss(p, BENCH_MLP, b)
+    x, y, _, _ = make_federated_classification(
+        jax.random.PRNGKey(0), n_clients=cfg.num_clients, per_client=30,
+        num_classes=10, image_shape=(1, 8, 8))
+
+    for backend in ("resident", "streamed"):
+        cfg_b = dataclasses.replace(cfg, bank_backend=backend)
+        trainer = Trainer(cfg_b, loss_fn, params)
+        state = replace(trainer.init(jax.random.PRNGKey(1)),
+                        key=jax.random.PRNGKey(2))
+        xs = np.asarray(x) if backend == "streamed" else x
+        ys = np.asarray(y) if backend == "streamed" else y
+        us = _time(lambda: jax.block_until_ready(
+            trainer.run(state, xs, ys, rounds=t_rounds)[0].prev_delta),
+            reps=3)
+        rows.append((f"bank_{backend}", us,
+                     f"T={t_rounds},n={cfg.num_clients},"
+                     f"r={cfg.clients_per_round},d={d},ef=on"))
+
+
 def bench_sharded_round(rows):
     """Sharded cohort round (shard_map over ('pod','data'), DESIGN.md §7)
     vs the vmapped single-device round, same cfg and key, via
@@ -195,6 +237,7 @@ def run():
 
     bench_pfels_transmit(key, rows)
     bench_round_drivers(rows)
+    bench_bank_backends(rows)
     bench_sharded_round(rows)
 
     for name, us, derived in rows:

@@ -1,0 +1,111 @@
+"""Population-scale ClientBank benchmark (DESIGN.md §10).
+
+Trains PFELS with ``bank_backend="streamed"`` at ``num_clients=100_000``
+— the Alg. 2 line 2 regime (r sampled from a large n) that the resident
+design could never reach — and PROVES the memory contract: during the
+whole run no ``(n, d)`` or ``(n, samples, ...)`` array may exist on
+device (the EF residual bank lives host-side; cohort slices stream
+through donated ``(r, d)`` buffers). Device-resident state is checked by
+walking ``jax.live_arrays()`` after training: any array with a leading
+population dim of rank >= 2 fails the run. Only ``(n,)`` vectors (power
+limits) may scale with n.
+
+Rows: one per population size, ``us_per_round`` wall time with the peak
+device-byte census in the derived column — device bytes must be ~flat in
+n while n grows 10x.
+
+  PYTHONPATH=src python -m benchmarks.population_scale [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import CNNConfig, PFELSConfig
+from repro.core.channel import scaled_channel
+from repro.data import make_population_source
+from repro.fl import Trainer
+from repro.models import cnn
+
+# tiny MLP (d ~ 700): population scale is about n, not d — the host-side
+# (n, d) residual bank at n=100_000 stays ~300 MB
+POP_MLP = CNNConfig(name="pop-mlp", arch="mlp", in_channels=1,
+                    image_size=4, num_classes=10, width_mult=0.125,
+                    source="tiny MLP for population-scale bank runs")
+
+
+def device_census(n_clients: int):
+    """(total_bytes, offenders): all live device arrays, and those whose
+    leading dim is the population size with rank >= 2 — the arrays the
+    streamed bank contract forbids."""
+    total, offenders = 0, []
+    for a in jax.live_arrays():
+        total += a.size * a.dtype.itemsize
+        if a.ndim >= 2 and a.shape[0] == n_clients:
+            offenders.append(tuple(a.shape))
+    return total, offenders
+
+
+def train_population(n_clients: int, *, rounds: int = 4, r: int = 16,
+                     per_client: int = 10, seed: int = 0):
+    """One streamed run at population n; returns (us_per_round, stats)."""
+    key = jax.random.PRNGKey(seed)
+    params = cnn.init_cnn(key, POP_MLP)
+    d = sum(p.size for p in jax.tree.leaves(params))
+    cfg = PFELSConfig(
+        num_clients=n_clients, clients_per_round=r, local_steps=2,
+        local_lr=0.05, compression_ratio=0.3, epsilon=2.0, rounds=rounds,
+        error_feedback=True, bank_backend="streamed",
+        channel=scaled_channel(d))
+    source, xt, yt = make_population_source(
+        key, n_clients=n_clients, per_client=per_client,
+        num_classes=POP_MLP.num_classes,
+        image_shape=(POP_MLP.in_channels, POP_MLP.image_size,
+                     POP_MLP.image_size))
+    loss_fn = lambda p, b: cnn.cnn_loss(p, POP_MLP, b)
+    trainer = Trainer(cfg, loss_fn, params)
+    state = trainer.init(key)
+
+    state, m = trainer.run(state, source, rounds=1)      # compile round
+    t0 = time.time()
+    state, m = trainer.run(state, source, rounds=rounds)
+    jax.block_until_ready(state.params)
+    us = (time.time() - t0) / rounds * 1e6
+
+    total, offenders = device_census(n_clients)
+    if offenders:
+        raise AssertionError(
+            f"population tensors leaked onto device at n={n_clients}: "
+            f"{offenders} (streamed-bank contract, DESIGN.md §10)")
+    assert np.isfinite(np.asarray(m["train_loss"])).all()
+    assert int(state.bank.counts.sum()) == (rounds + 1) * r
+    assert state.bank.residuals.shape == (n_clients, d)   # host-side
+    stats = {"d": d, "device_mb": total / 1e6,
+             "loss": float(np.asarray(m["train_loss"])[-1])}
+    return us, stats
+
+
+def run(quick: bool = False, smoke: bool = False):
+    sizes = (2_000, 10_000) if (quick or smoke) else (10_000, 100_000)
+    rounds = 2 if (quick or smoke) else 4
+    rows = []
+    for n in sizes:
+        us, s = train_population(n, rounds=rounds)
+        print(f"population n={n}: {us:.0f} us/round, "
+              f"device={s['device_mb']:.1f} MB, d={s['d']}", flush=True)
+        rows.append((f"population_scale_n{n}", us,
+                     f"d={s['d']},device_mb={s['device_mb']:.1f},"
+                     f"loss={s['loss']:.3f}"))
+    # the headline claim: device bytes flat while n grows
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-size populations (2k/10k, 2 rounds)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -14,12 +14,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer rounds/seeds (CI mode)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3,fig4,table2,fig5,fig7,beyond,kernels,roofline")
+                    help="comma list: fig3,fig4,table2,fig5,fig7,beyond,"
+                         "population,kernels,roofline")
     args = ap.parse_args()
 
     from benchmarks import (beyond_paper, fig3_compression,
                             fig4_privacy_accuracy, fig5_comm, fig7_energy,
-                            kernel_bench, roofline, table2_summary)
+                            kernel_bench, population_scale, roofline,
+                            table2_summary)
 
     rounds = 12 if args.quick else 30
     seeds = (0,) if args.quick else (0, 1, 2)
@@ -31,6 +33,7 @@ def main() -> None:
         "fig5": lambda: fig5_comm.run(rounds=rounds),
         "fig7": lambda: fig7_energy.run(rounds=rounds),
         "beyond": lambda: beyond_paper.run(rounds=rounds),
+        "population": lambda: population_scale.run(quick=args.quick),
         "kernels": kernel_bench.run,
         "roofline": roofline.run,
     }

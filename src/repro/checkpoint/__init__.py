@@ -1,3 +1,5 @@
-from repro.checkpoint.io import load_meta, restore, save
+from repro.checkpoint.io import (load_meta, restore, restore_train_state,
+                                 save, save_train_state)
 
-__all__ = ["save", "restore", "load_meta"]
+__all__ = ["save", "restore", "load_meta", "save_train_state",
+           "restore_train_state"]

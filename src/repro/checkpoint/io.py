@@ -1,4 +1,14 @@
-"""Checkpointing: pytrees -> npz (flattened key paths) + JSON metadata."""
+"""Checkpointing: pytrees -> npz (flattened key paths) + JSON metadata.
+
+``save``/``restore`` handle any pytree; ``save_train_state`` /
+``restore_train_state`` are the TrainState-aware layer (DESIGN.md §10):
+they carry the ClientBank (EF residuals, per-client PRNG lanes,
+participation counts) alongside params/ledger/PRNG key, record the bank
+backend + round in the JSON sidecar, and restore each leaf to where its
+template leaf lives — device arrays stay device arrays (resident bank),
+host numpy stays host numpy (streamed bank), so a checkpoint taken under
+one backend resumes under the other.
+"""
 from __future__ import annotations
 
 import json
@@ -52,3 +62,36 @@ def restore(path: str, like) -> Any:
 def load_meta(path: str) -> Dict[str, Any]:
     with open(os.path.splitext(path)[0] + ".json") as f:
         return json.load(f)
+
+
+# ---------------------------------------------------- TrainState + bank
+
+def save_train_state(path: str, state, *, backend: str = "resident",
+                     extra_meta: Dict[str, Any] = None):
+    """Checkpoint a :class:`repro.fl.api.TrainState` (bank included).
+
+    The bank's numpy (streamed) or device (resident) leaves flatten
+    identically, so the on-disk layout is backend-independent; ``backend``
+    is recorded in the metadata for bookkeeping, not dispatch."""
+    meta = {"kind": "train_state", "bank_backend": backend,
+            "round": int(state.round),
+            "spends": int(state.ledger.spends)}
+    if extra_meta:
+        meta.update(extra_meta)
+    save(path, state, meta=meta)
+
+
+def restore_train_state(path: str, like):
+    """Restore a TrainState into the structure of ``like`` (e.g.
+    ``trainer.init(key)``). Each leaf lands where the template leaf
+    lives: jax-array templates are ``device_put`` (resident bank),
+    numpy templates stay host-side (streamed bank) — which is also how a
+    resident checkpoint re-opens as a streamed one and vice versa."""
+    restored = restore(path, like)
+
+    def _place(tmpl, leaf):
+        if isinstance(tmpl, jax.Array):
+            return jax.device_put(leaf)
+        return np.asarray(leaf)
+
+    return jax.tree.map(_place, like, restored)

@@ -216,6 +216,14 @@ class PFELSConfig:
     # drops back to the vmapped path whenever the mesh's client extent is 1
     # or does not divide clients_per_round (graceful replication).
     client_sharding: str = "none"     # none | cohort
+    # ClientBank backend (DESIGN.md §10): "resident" keeps all per-client
+    # state (EF residuals, PRNG lanes, participation counts) as dense
+    # device arrays carried through the scan — bit-identical to the
+    # pre-bank behavior. "streamed" keeps the bank host-side and moves
+    # only the sampled r-client cohort on/off device each round, so
+    # device memory is independent of num_clients (the population-scale
+    # path; benchmarks/population_scale.py runs 100_000 clients).
+    bank_backend: str = "resident"    # resident | streamed
     channel: ChannelConfig = field(default_factory=ChannelConfig)
 
     def resolved_delta(self) -> float:

@@ -1,6 +1,12 @@
-from repro.data.loader import epoch_batches, sample_batch
+from repro.data.loader import (ArraySource, ClientFnSource, CohortSource,
+                               as_cohort_source, epoch_batches,
+                               prefetch_cohorts, sample_batch)
 from repro.data.synthetic import (make_federated_classification,
-                                  make_lm_sequences, make_prototypes)
+                                  make_lm_sequences,
+                                  make_population_source, make_prototypes)
 
-__all__ = ["epoch_batches", "sample_batch", "make_federated_classification",
-           "make_lm_sequences", "make_prototypes"]
+__all__ = ["ArraySource", "ClientFnSource", "CohortSource",
+           "as_cohort_source", "epoch_batches", "prefetch_cohorts",
+           "sample_batch", "make_federated_classification",
+           "make_lm_sequences", "make_population_source",
+           "make_prototypes"]

@@ -50,6 +50,49 @@ def make_federated_classification(
     return x, y, xt, yt
 
 
+def make_population_source(key, *, n_clients: int, per_client: int,
+                           num_classes: int = 10, image_shape=(1, 8, 8),
+                           noise: float = 0.6):
+    """Population-scale synthetic federation (DESIGN.md §10): client i's
+    samples are generated ON DEMAND from ``fold_in(key, i)`` — the same
+    class-prototype + Gaussian-noise family as
+    :func:`make_federated_classification`, but no ``(n, samples, ...)``
+    tensor ever exists, so n can be 100_000+ (Alg. 2 line 2 at the
+    population sizes Thm 2's r/n amplification targets).
+
+    Returns ``(source, test_x, test_y)`` where ``source`` is a
+    :class:`repro.data.loader.ClientFnSource` whose ``cohort(sel)`` is a
+    jitted vmap over the selected client ids — O(r) memory per call.
+    Deterministic in the client id: the same client always serves the
+    same samples, whichever rounds sample it.
+    """
+    from repro.data import loader
+
+    kp, kc, kt = jax.random.split(key, 3)
+    protos = make_prototypes(kp, num_classes, image_shape)
+    shape = tuple(image_shape)
+
+    def one_client(cid):
+        ck = jax.random.fold_in(kc, cid)
+        kl, kn = jax.random.split(ck)
+        y = jax.random.randint(kl, (per_client,), 0, num_classes)
+        x = protos[y] + noise * jax.random.normal(
+            kn, (per_client,) + shape)
+        return x, y
+
+    cohort_fn = jax.jit(jax.vmap(one_client))
+
+    def cohort(sel):
+        cx, cy = cohort_fn(jnp.asarray(sel))
+        return cx, cy
+
+    n_test = max(num_classes * 20, 200)
+    yt = jax.random.randint(kt, (n_test,), 0, num_classes)
+    xt = protos[yt] + noise * jax.random.normal(
+        jax.random.fold_in(kt, 1), (n_test,) + shape)
+    return loader.ClientFnSource(cohort, n_clients), xt, yt
+
+
 def make_lm_sequences(key, *, n_seqs: int, seq_len: int, vocab: int,
                       order: int = 1):
     """Synthetic LM data from a random Markov chain (learnable structure)."""

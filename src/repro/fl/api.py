@@ -2,15 +2,23 @@
 
 One object owns the compiled round machinery (``Trainer``) and one
 registered pytree owns ALL loop state (``TrainState``): params as a pytree
-(ravel/unravel is an internal detail), the error-feedback residual memory,
-the previous round's reconstructed update ``prev_delta`` (the server_topk
-support source — previously smuggled through the metrics dict), the
-per-device power limits, the PRNG key, the round counter, and the in-graph
-privacy ledger (``repro.core.privacy.LedgerState``), whose (ε, δ)
-accumulators are updated INSIDE the compiled program from the realized
-per-round β — so ``Trainer.run`` (the ``lax.scan`` path) returns exact
-budget totals without T host round-trips, and chunked resume carries the
-ledger automatically.
+(ravel/unravel is an internal detail), the per-client ``ClientBank``
+(error-feedback residuals, PRNG lanes, participation counts —
+``repro.fl.bank``, DESIGN.md §10), the previous round's reconstructed
+update ``prev_delta`` (the server_topk support source — previously
+smuggled through the metrics dict), the per-device power limits, the PRNG
+key, the round counter, and the in-graph privacy ledger
+(``repro.core.privacy.LedgerState``), whose (ε, δ) accumulators are
+updated INSIDE the compiled program from the realized per-round β — so
+``Trainer.run`` (the ``lax.scan`` path) returns exact budget totals
+without T host round-trips, and chunked resume carries the ledger
+automatically.
+
+``cfg.bank_backend`` selects where the bank lives: ``resident`` (dense
+device arrays in the scan carry — the bit-exact reference) or
+``streamed`` (host-side bank + double-buffer-prefetched cohort slices;
+device memory independent of ``num_clients``). The two are bit-identical
+under the same key; ``run``/``step`` signatures do not change.
 
 ``Trainer.step(state, data_x, data_y) -> (state, metrics)`` and
 ``Trainer.run(state, data_x, data_y, rounds=T) -> (state, stacked_metrics)``
@@ -40,9 +48,13 @@ import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh
 
+import numpy as np
+
 from repro.configs.base import PFELSConfig
 from repro.core import privacy
+from repro.data import loader
 from repro.fl import algorithms, rounds
+from repro.fl import bank as bank_lib
 
 # init derives the round-key stream by folding this tag into the init key,
 # so power-limit sampling and the training stream never share a key
@@ -55,22 +67,32 @@ class TrainState:
 
     Donate-safe and scan-carry-safe: every field is an array (or params
     pytree), so checkpointing, ``lax.scan``, and chunked resume carry the
-    whole loop — including the privacy ledger — with no host-side
-    bookkeeping. ``residuals`` is None unless ``cfg.error_feedback``;
-    ``prev_delta`` starts at zeros (the documented server_topk cold start).
+    whole loop — including the privacy ledger and the per-client
+    ``ClientBank`` state — with no host-side bookkeeping. ``bank`` holds
+    ALL per-client persistent state (error-feedback residuals, PRNG
+    lanes, participation counts; DESIGN.md §10) — device arrays under the
+    ``resident`` backend, host numpy under ``streamed``. ``prev_delta``
+    starts at zeros (the documented server_topk cold start).
     """
     params: Any                       # model pytree
     power_limits: jnp.ndarray         # (N,) P_i, fixed per device
-    residuals: Optional[jnp.ndarray]  # (N, d) error-feedback memory or None
+    bank: bank_lib.BankState          # per-client state (DESIGN.md §10)
     prev_delta: jnp.ndarray           # (d,) last reconstructed Delta_hat
     key: jnp.ndarray                  # PRNG key the NEXT step/run consumes
     round: jnp.ndarray                # i32 scalar, rounds completed
     ledger: privacy.LedgerState       # in-graph (eps, delta) accumulators
 
+    @property
+    def residuals(self) -> Optional[jnp.ndarray]:
+        """(N, d) error-feedback memory (None unless
+        ``cfg.error_feedback``) — lives in the bank; kept as a read alias
+        for the pre-bank field."""
+        return self.bank.residuals
+
 
 jax.tree_util.register_dataclass(
     TrainState,
-    data_fields=["params", "power_limits", "residuals", "prev_delta",
+    data_fields=["params", "power_limits", "bank", "prev_delta",
                  "key", "round", "ledger"],
     meta_fields=[])
 
@@ -103,35 +125,46 @@ class Trainer:
         self.unravel = unravel
         self._params_template = params_template
         self.mesh = rounds._resolve_cohort_mesh(cfg, mesh)
-        self._core = rounds._build_round_core(cfg, loss_fn, self.d, unravel,
-                                              self.mesh)
-        self.step = jax.jit(self._step_impl)
+        self.bank = bank_lib.make_bank(cfg.bank_backend, cfg.num_clients,
+                                       self.d, cfg.error_feedback)
+        if self.bank.backend == "streamed" and self.mesh is not None:
+            raise ValueError(
+                "bank_backend='streamed' is host-driven and does not "
+                "compose with client_sharding='cohort' yet — stream the "
+                "bank OR shard the cohort (DESIGN.md §10)")
+        self._cohort_core = rounds._build_cohort_core(
+            cfg, loss_fn, self.d, unravel, self.mesh)
+        self._core = rounds._build_round_core(
+            cfg, loss_fn, self.d, unravel, self.mesh,
+            cohort_core=self._cohort_core)
+        self.step = (self._streamed_step_api
+                     if self.bank.backend == "streamed"
+                     else jax.jit(self._step_impl))
         self._run_cache: Dict[int, Callable] = {}
+        self._cohort_step_jit: Optional[Callable] = None
 
     # ------------------------------------------------------------- state
 
     def init(self, key, params: Any = None) -> TrainState:
         """Fresh TrainState: power limits drawn from ``key`` (the same draw
-        as the legacy ``setup``), zeroed ledger/residuals/prev_delta, and
-        the round-key stream forked off ``key`` (never reusing the
-        power-limit draw)."""
+        as the legacy ``setup``), zeroed ledger/bank/prev_delta, and the
+        round-key stream forked off ``key`` (never reusing the power-limit
+        draw)."""
         params = self._params_template if params is None else params
-        res = (jnp.zeros((self.cfg.num_clients, self.d), jnp.float32)
-               if self.cfg.error_feedback else None)
         return TrainState(
             params=params,
             power_limits=rounds.init_power_limits(key, self.cfg, self.d),
-            residuals=res,
+            bank=self.bank.init(),
             prev_delta=jnp.zeros((self.d,), jnp.float32),
             key=jax.random.fold_in(key, _RUN_STREAM_TAG),
             round=jnp.zeros((), jnp.int32),
             ledger=privacy.ledger_init())
 
-    def _advance(self, state: TrainState, n: int, params, residuals,
+    def _advance(self, state: TrainState, n: int, params, bank,
                  prev_delta, ledger) -> TrainState:
         return TrainState(
             params=params, power_limits=state.power_limits,
-            residuals=residuals, prev_delta=prev_delta,
+            bank=bank, prev_delta=prev_delta,
             key=jax.random.fold_in(state.key, n),
             round=state.round + n, ledger=ledger)
 
@@ -151,23 +184,50 @@ class Trainer:
 
     # ------------------------------------------------------------- loops
 
+    def _bank_round(self, params, power_limits, bank, prev_delta,
+                    data_x, data_y, round_key):
+        """One round against the in-graph (resident) bank: sample the
+        cohort, gather its slices, run the cohort core, scatter the
+        residual slice + this round's bank lanes back (DESIGN.md §10)."""
+        ks = rounds.split_round_key(round_key)
+        sel = rounds.sample_cohort(ks[0], self.cfg.num_clients,
+                                   self.cfg.clients_per_round)
+        res_sel = self.bank.gather(bank, sel)
+        new_params, metrics, new_res_sel, delta_hat = self._cohort_core(
+            params, power_limits[sel], data_x[sel], data_y[sel], ks,
+            res_sel, prev_delta)
+        lanes = bank_lib.cohort_lane_keys(
+            ks[rounds.ROUND_KEY_LANES["bank"]], sel)
+        new_bank = self.bank.scatter(bank, sel, new_res_sel, lanes)
+        return new_params, metrics, new_bank, delta_hat
+
     def _step_impl(self, state: TrainState, data_x, data_y):
-        new_params, metrics, new_res, delta_hat = self._core(
-            state.params, state.power_limits, data_x, data_y, state.key,
-            state.residuals, state.prev_delta)
+        new_params, metrics, new_bank, delta_hat = self._bank_round(
+            state.params, state.power_limits, state.bank, state.prev_delta,
+            data_x, data_y, state.key)
         ledger, metrics = self._spend(state.ledger, metrics)
-        return self._advance(state, 1, new_params, new_res, delta_hat,
+        return self._advance(state, 1, new_params, new_bank, delta_hat,
                              ledger), metrics
 
-    def run(self, state: TrainState, data_x, data_y,
+    def run(self, state: TrainState, data_x, data_y=None,
             rounds: Optional[int] = None):
-        """T rounds as ONE ``lax.scan`` program (T defaults to
-        ``cfg.rounds``). Returns ``(state, metrics)`` with every metrics
-        leaf stacked over the T rounds (leading axis T). Chunked resume is
-        just calling ``run`` again with the returned state — residuals,
-        server_topk support, PRNG stream, and the privacy ledger all carry
-        in ``TrainState``."""
+        """T rounds (T defaults to ``cfg.rounds``). Returns
+        ``(state, metrics)`` with every metrics leaf stacked over the T
+        rounds (leading axis T). Chunked resume is just calling ``run``
+        again with the returned state — the bank (EF residuals, lanes,
+        counts), server_topk support, PRNG stream, and the privacy ledger
+        all carry in ``TrainState``.
+
+        Under the ``resident`` bank this is ONE ``lax.scan`` program over
+        device-resident population tensors. Under ``streamed`` it is the
+        host-driven cohort loop (DESIGN.md §10): ``data_x``/``data_y`` may
+        be host arrays or a :class:`repro.data.loader.CohortSource`, the
+        per-round cohorts are double-buffer prefetched, and only
+        ``(r, ...)`` slices ever reach the device — both backends are
+        bit-identical under the same key."""
         t = self.cfg.rounds if rounds is None else int(rounds)
+        if self.bank.backend == "streamed":
+            return self._run_streamed(state, data_x, data_y, t)
         fn = self._run_cache.get(t)
         if fn is None:
             fn = jax.jit(lambda s, x, y: self._run_impl(s, x, y, t))
@@ -176,18 +236,109 @@ class Trainer:
 
     def _run_impl(self, state: TrainState, data_x, data_y, t_rounds: int):
         def body(carry, round_key):
-            p, res, prev, ledger = carry
-            p2, metrics, res2, delta_hat = self._core(
-                p, state.power_limits, data_x, data_y, round_key, res, prev)
+            p, bank, prev, ledger = carry
+            p2, metrics, bank2, delta_hat = self._bank_round(
+                p, state.power_limits, bank, prev, data_x, data_y,
+                round_key)
             ledger, metrics = self._spend(ledger, metrics)
-            return (p2, res2, delta_hat, ledger), metrics
+            return (p2, bank2, delta_hat, ledger), metrics
 
         keys = jax.random.split(state.key, t_rounds)
-        (p_f, res_f, delta_f, ledger_f), metrics = jax.lax.scan(
-            body, (state.params, state.residuals, state.prev_delta,
+        (p_f, bank_f, delta_f, ledger_f), metrics = jax.lax.scan(
+            body, (state.params, state.bank, state.prev_delta,
                    state.ledger), keys)
-        return self._advance(state, t_rounds, p_f, res_f, delta_f,
+        return self._advance(state, t_rounds, p_f, bank_f, delta_f,
                              ledger_f), metrics
+
+    # ------------------------------------------------- streamed execution
+
+    def _cohort_step(self):
+        """The jitted streamed round: pure cohort slices in, cohort slices
+        out. The ``res_sel`` gather buffer is donated — XLA reuses it for
+        the ``new_res_sel`` output, so the (r, d) scatter staging buffer
+        is recycled across rounds instead of accumulating (DESIGN.md §10).
+        ``cx``/``cy`` are not donated: no output shares their shape, so
+        donation could never be honored."""
+        if self._cohort_step_jit is None:
+            def step_fn(params, p_sel, cx, cy, ks, sel, res_sel,
+                        prev_delta, ledger):
+                new_params, metrics, new_res_sel, delta_hat = \
+                    self._cohort_core(params, p_sel, cx, cy, ks, res_sel,
+                                      prev_delta)
+                ledger, metrics = self._spend(ledger, metrics)
+                lanes = bank_lib.cohort_lane_keys(
+                    ks[rounds.ROUND_KEY_LANES["bank"]], sel)
+                return (new_params, metrics, new_res_sel, lanes, delta_hat,
+                        ledger)
+
+            self._cohort_step_jit = jax.jit(step_fn, donate_argnums=(6,))
+        return self._cohort_step_jit
+
+    def _streamed_rounds(self, state: TrainState, source, round_keys):
+        """Drive ``len(round_keys)`` rounds with the bank host-side: only
+        the sampled cohort's data/residual slices move on/off device.
+
+        Clones the host bank ONCE per call (callers keep their states
+        valid), so the O(n·d) memcpy amortizes over the rounds of a
+        ``run`` — prefer ``run(rounds=T)`` over a ``step`` loop with the
+        streamed backend."""
+        cfg = self.cfg
+        n, r = cfg.num_clients, cfg.clients_per_round
+        if getattr(source, "n", n) != n:
+            raise ValueError(
+                f"cohort source serves {source.n} clients but "
+                f"cfg.num_clients={n}: Alg. 2 line 2 samples from "
+                f"cfg.num_clients, so a mismatched source silently "
+                f"truncates the population (and the Thm 2 r/n "
+                f"accounting)")
+        ks_all = jax.vmap(rounds.split_round_key)(round_keys)  # (T, 7, ·)
+        sels = jax.vmap(lambda ks: rounds.sample_cohort(ks[0], n, r))(
+            ks_all)
+        sels_np = np.asarray(sels)
+        step_fn = self._cohort_step()
+
+        bank = self.bank.clone(state.bank)   # callers keep their state
+        params, prev_delta, ledger = state.params, state.prev_delta, \
+            state.ledger
+        per_round = []
+        prefetch = loader.prefetch_cohorts(source, sels_np)
+        for ti, (cx, cy) in enumerate(prefetch):
+            sel = sels_np[ti]
+            res_sel = self.bank.gather(bank, sel)
+            if res_sel is not None:
+                res_sel = jnp.asarray(res_sel)
+            params, metrics, new_res_sel, lanes, prev_delta, ledger = \
+                step_fn(params, jnp.asarray(state.power_limits)[sel],
+                        cx, cy, ks_all[ti], jnp.asarray(sel), res_sel,
+                        prev_delta, ledger)
+            bank = self.bank.scatter(bank, sel, new_res_sel, lanes)
+            per_round.append(metrics)
+        stacked = {k: np.stack([np.asarray(m[k]) for m in per_round])
+                   for k in per_round[0]}
+        return params, stacked, bank, prev_delta, ledger
+
+    def _run_streamed(self, state: TrainState, data_x, data_y, t: int):
+        if t < 1:
+            raise ValueError(
+                "run(rounds=0) is not meaningful with the streamed bank "
+                "(the metric structure comes from executed rounds); call "
+                "with rounds >= 1")
+        source = loader.as_cohort_source(data_x, data_y)
+        keys = jax.random.split(state.key, t)
+        params, metrics, bank, prev_delta, ledger = self._streamed_rounds(
+            state, source, keys)
+        return self._advance(state, t, params, bank, prev_delta,
+                             ledger), metrics
+
+    def _streamed_step_api(self, state: TrainState, data_x, data_y=None):
+        """Streamed ``step``: consumes ``state.key`` whole as the round
+        key (the resident/legacy schedule), not ``split(key, 1)``."""
+        source = loader.as_cohort_source(data_x, data_y)
+        params, metrics, bank, prev_delta, ledger = self._streamed_rounds(
+            state, source, state.key[None])
+        metrics = {k: v[0] for k, v in metrics.items()}
+        return self._advance(state, 1, params, bank, prev_delta,
+                             ledger), metrics
 
     # ------------------------------------------------------- conveniences
 

@@ -44,6 +44,33 @@ from repro.sharding import rules
 
 _COHORT_AXES = ("pod", "data")
 
+# The fixed 7-lane split of each round key (DESIGN.md §5). Which lane
+# feeds which draw is a compatibility contract — pinned by
+# tests/test_bank.py::test_key_lane_contract — because silently shifting
+# a lane re-randomizes every stream in the round.
+ROUND_KEY_LANES = {
+    "selection": 0,      # Alg. 2 line 2 client sampling
+    "client_train": 1,   # per-client local-training keys
+    "gains": 2,          # channel gains |h_i| for the round
+    "support": 3,        # rand-k support omega_t
+    "channel_noise": 4,  # receiver noise (or digital-aggregation noise)
+    "bank": 5,           # ClientBank per-client lanes (DESIGN.md §10)
+    "csi": 6,            # CSI estimation error (beyond paper)
+}
+
+
+def split_round_key(key):
+    """The per-round 7-subkey split (DESIGN.md §5) — every execution path
+    (legacy shims, Trainer resident scan, Trainer streamed loop) consumes
+    lanes from this one split."""
+    return jax.random.split(key, len(ROUND_KEY_LANES))
+
+
+def sample_cohort(key, n: int, r: int):
+    """Alg. 2 line 2: sample r of n clients without replacement. ``key``
+    must be the round's ``selection`` lane."""
+    return jax.random.choice(key, n, (r,), replace=False)
+
 
 @dataclass
 class FLState:
@@ -102,14 +129,22 @@ def _cohort_shards(cfg: PFELSConfig, mesh: Optional[Mesh]) -> int:
     return n
 
 
-def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
-                      unravel: Callable, mesh: Optional[Mesh] = None):
-    """The raw (un-jitted) round body, uniform across algorithms: returns
-    ``(new_params, metrics, new_residuals, delta_hat)`` so it can back both
-    the single-round ``make_round_fn`` wrapper and the ``lax.scan`` driver
-    in ``make_training_fn``. With ``cfg.client_sharding="cohort"`` and a
-    multi-device `mesh`, the per-client pipeline is shard_mapped over the
-    cohort axis (module docstring)."""
+def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
+                       unravel: Callable, mesh: Optional[Mesh] = None):
+    """The raw (un-jitted) round body on COHORT slices, uniform across
+    algorithms: ``cohort_core(params, p_sel, cx, cy, ks, res_sel,
+    prev_delta) -> (new_params, metrics, new_res_sel, delta_hat)`` where
+    every client-indexed input/output is the sampled r-client slice —
+    ``p_sel`` (r,), ``cx``/``cy`` (r, samples, ...), ``res_sel`` (r, d) or
+    None — and ``ks`` is the ``split_round_key`` output (lanes 1-6
+    consumed here; selection/bank lanes 0 and 5 belong to the caller).
+
+    Population tensors never enter: this is what lets the streamed
+    ClientBank (DESIGN.md §10) run the identical compiled body on
+    host-gathered cohorts with device memory independent of n. With
+    ``cfg.client_sharding="cohort"`` and a multi-device `mesh`, the
+    per-client pipeline is shard_mapped over the cohort axis (module
+    docstring)."""
     k_coords = max(int(round(cfg.compression_ratio * d)), 1)
     alg = algorithms.get_algorithm(cfg.algorithm)
     sigma0 = cfg.channel.noise_std
@@ -130,12 +165,19 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         flat = jax.vmap(lambda u: ravel_pytree(u)[0])(updates)
         return flat, losses
 
-    def support_and_beta(gains, p_sel, prev_delta, idx_key):
+    def support_and_beta(gains_obs, p_sel, prev_delta, idx_key):
         """Registry hooks: support omega_t + β-design, from the GLOBAL (r,)
-        gains — shared by both execution paths."""
+        gains — shared by both execution paths. ``gains_obs`` must be the
+        gains the devices actually OBSERVE (``gains_est`` under imperfect
+        CSI): each device transmits ``x_i = (beta/h_i^est) A Delta_i``, so
+        its energy is ``(beta/h_i^est)^2 ||A Delta_i||^2`` and the Eq. 34c
+        power cap only bounds it by ``P_i`` when beta is designed from
+        ``h^est`` — designing from the true gains violated ``P_i``
+        whenever ``h_i < h_i^est`` (regression-tested in
+        tests/test_power_control.py)."""
         idx, k_used = alg.select_support(cfg, d, k_coords, prev_delta,
                                          idx_key)
-        beta = alg.design_beta(cfg, gains, p_sel, d, k_used)
+        beta = alg.design_beta(cfg, gains_obs, p_sel, d, k_used)
         return idx, beta, k_used
 
     cohort_apply = None
@@ -183,13 +225,8 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                       P(), P(), P()),
             out_specs=(spec_c, spec_c, spec_c, P(), P()))
 
-    def round_core(params, power_limits, data_x, data_y, key,
-                   residuals=None, prev_delta=None):
-        ks = jax.random.split(key, 7)
-        # ---- sample r clients without replacement (Alg. 2 line 2)
-        sel = jax.random.choice(ks[0], cfg.num_clients, (r,), replace=False)
-        cx, cy = data_x[sel], data_y[sel]
-        p_sel = power_limits[sel]
+    def cohort_core(params, p_sel, cx, cy, ks, res_sel=None,
+                    prev_delta=None):
         ck = jax.random.split(ks[1], r)
 
         # ---- channel state for this round (§4.1); imperfect CSI (beyond
@@ -201,22 +238,26 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         idx = beta = None
         k_used = d
         if aircomp:
-            idx, beta, k_used = support_and_beta(gains, p_sel, prev_delta,
-                                                 ks[3])
+            # beta designed from what the devices observe (gains_est ==
+            # gains under perfect CSI) — the power cap must hold for the
+            # precompensation the devices actually apply
+            idx, beta, k_used = support_and_beta(
+                gains_est if cfg.channel.csi_error > 0 else gains,
+                p_sel, prev_delta, ks[3])
 
         # ---- local training (lines 5-11) + error feedback [28-30]
         # (beyond-paper option): add each selected client's residual memory
         # to its update before sparsification; the untransmitted remainder
         # is carried forward
+        use_ef = cfg.error_feedback and res_sel is not None
         agg_sharded = None
         transmit_scales = None
         if cohort_apply is not None:
-            res_sel = (residuals[sel]
-                       if cfg.error_feedback and residuals is not None
-                       else jnp.zeros((r, d), jnp.float32))
+            res_l = (res_sel if use_ef
+                     else jnp.zeros((r, d), jnp.float32))
             flat_updates, losses, scales_sh, delta_sh, energy_sh = \
                 cohort_apply(
-                    params, cx, cy, ck, res_sel, gains, gains_est,
+                    params, cx, cy, ck, res_l, gains, gains_est,
                     idx if idx is not None else jnp.arange(1),
                     beta if beta is not None else jnp.asarray(1.0,
                                                               jnp.float32),
@@ -227,8 +268,8 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                     transmit_scales = scales_sh
         else:
             flat_updates, losses = client_updates(params, cx, cy, ck)
-            if cfg.error_feedback and residuals is not None:
-                flat_updates = flat_updates + residuals[sel]
+            if use_ef:
+                flat_updates = flat_updates + res_sel
 
         metrics: Dict[str, jnp.ndarray] = {
             "train_loss": jnp.mean(losses),
@@ -272,9 +313,10 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         # ---- error-feedback memory update: e_i <- u_i - s_i A^T A u_i,
         # where s_i is the transmit clip scale — what was actually sent is
         # the clipped sparsified update, so the clipped-away fraction stays
-        # in the residual memory too
-        new_residuals = residuals
-        if cfg.error_feedback and residuals is not None:
+        # in the residual memory too. Returned as the (r, d) cohort slice;
+        # the caller (ClientBank) owns the scatter into the (n, d) bank.
+        new_res_sel = res_sel
+        if use_ef:
             if alg.sparsifies_transmit:
                 transmitted = jax.vmap(
                     lambda u: randk.sparsify(u, idx, d))(flat_updates)
@@ -284,13 +326,46 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                 # computed once by whichever path aggregated (both set it
                 # under exactly this transmit_clip + error_feedback case)
                 transmitted = transmitted * transmit_scales[:, None]
-            new_residuals = residuals.at[sel].set(
-                flat_updates - transmitted)
+            new_res_sel = flat_updates - transmitted
 
         # ---- server update (line 16)
         flat_params, _ = ravel_pytree(params)
         new_flat = flat_params + delta_hat
-        return unravel(new_flat), metrics, new_residuals, delta_hat
+        return unravel(new_flat), metrics, new_res_sel, delta_hat
+
+    return cohort_core
+
+
+def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
+                      unravel: Callable, mesh: Optional[Mesh] = None,
+                      cohort_core: Optional[Callable] = None):
+    """Population-tensor round body — the pre-bank contract
+    ``round_core(params, power_limits, data_x, data_y, key, residuals,
+    prev_delta) -> (new_params, metrics, new_residuals, delta_hat)`` —
+    now a thin shell over :func:`_build_cohort_core`: split the round key,
+    sample the cohort (Alg. 2 line 2), gather the ``sel`` slices, run the
+    cohort core, scatter the residual slice back. Backs the deprecated
+    ``make_round_fn``/``make_training_fn`` shims (bit-identical under the
+    same key). ``cohort_core`` reuses an already-built core (the Trainer
+    shares one between its bank paths and these shims)."""
+    if cohort_core is None:
+        cohort_core = _build_cohort_core(cfg, loss_fn, d, unravel, mesh)
+    r = cfg.clients_per_round
+
+    def round_core(params, power_limits, data_x, data_y, key,
+                   residuals=None, prev_delta=None):
+        ks = split_round_key(key)
+        sel = sample_cohort(ks[0], cfg.num_clients, r)
+        res_sel = (residuals[sel]
+                   if cfg.error_feedback and residuals is not None
+                   else None)
+        new_params, metrics, new_res_sel, delta_hat = cohort_core(
+            params, power_limits[sel], data_x[sel], data_y[sel], ks,
+            res_sel, prev_delta)
+        new_residuals = residuals
+        if new_res_sel is not None and residuals is not None:
+            new_residuals = residuals.at[sel].set(new_res_sel)
+        return new_params, metrics, new_residuals, delta_hat
 
     return round_core
 

@@ -25,7 +25,7 @@ from repro.configs.base import PFELSConfig
 from repro.configs.paper_models import BENCH_MLP, BENCH_CNN_CIFAR
 from repro.core.channel import scaled_channel
 from repro.fl import Trainer, list_algorithms
-from repro.data import make_federated_classification
+from repro.data import make_federated_classification, make_population_source
 from repro.models import cnn
 
 
@@ -41,13 +41,22 @@ def run_simulation(args):
         rounds=args.rounds, momentum=args.momentum,
         algorithm=args.algorithm,
         dp_fedavg_sigma=args.dp_sigma,
+        bank_backend=args.bank,
         channel=scaled_channel(d))
-    x, y, xt, yt = make_federated_classification(
-        key, n_clients=cfg.num_clients, per_client=args.per_client,
-        num_classes=model_cfg.num_classes,
-        image_shape=(model_cfg.in_channels, model_cfg.image_size,
-                     model_cfg.image_size),
-        alpha=args.dirichlet_alpha)
+    image_shape = (model_cfg.in_channels, model_cfg.image_size,
+                   model_cfg.image_size)
+    if args.bank == "streamed" and args.dirichlet_alpha is None:
+        # population-scale path (DESIGN.md §10): on-demand per-client
+        # generation + host-side bank; no (n, samples, ...) tensor exists
+        x, xt, yt = make_population_source(
+            key, n_clients=cfg.num_clients, per_client=args.per_client,
+            num_classes=model_cfg.num_classes, image_shape=image_shape)
+        y = None
+    else:
+        x, y, xt, yt = make_federated_classification(
+            key, n_clients=cfg.num_clients, per_client=args.per_client,
+            num_classes=model_cfg.num_classes, image_shape=image_shape,
+            alpha=args.dirichlet_alpha)
     loss_fn = lambda p, b: cnn.cnn_loss(p, model_cfg, b)
     trainer = Trainer(cfg, loss_fn, params)
     state = trainer.init(key)
@@ -101,6 +110,12 @@ def main():
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--dp-sigma", type=float, default=1.0)
     ap.add_argument("--dirichlet-alpha", type=float, default=None)
+    ap.add_argument("--bank", default="resident",
+                    choices=["resident", "streamed"],
+                    help="ClientBank backend (DESIGN.md §10): 'streamed' "
+                         "keeps per-client state host-side and generates "
+                         "cohort data on demand — num_clients can be "
+                         "100_000+ with device memory independent of n")
     ap.add_argument("--eval-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)

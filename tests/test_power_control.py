@@ -70,6 +70,67 @@ def test_power_limit_satisfied_statistically():
         assert mean_e <= float(p[i]) * 1.05
 
 
+def test_power_limit_respected_under_imperfect_csi():
+    """Regression (ISSUE 4): with imperfect CSI each device precompensates
+    with its OBSERVED gain h_est, so its transmit energy is
+    (beta/h_est_i)^2 ||A u||^2 — the Eq. 34c cap bounds it by P_i only
+    when beta is designed from h_est. Designing from the true gains (the
+    old behavior) violates P_i whenever h_i < h_i^est. Checks the
+    statistical per-device bound E||x_i||^2 <= P_i (Lemma-5 expectation
+    over the rand-k support) for the est-designed beta, and that the
+    true-gain design really was violating."""
+    r, d, k = 6, 512, 128
+    cfg = ChannelConfig(csi_error=0.3)
+    # huge epsilon so the power cap (not the privacy cap) binds beta
+    kw = dict(KW, epsilon=1e9, r=r)
+    ete = kw["eta"] * kw["tau"] * kw["c1"]   # Assumption-1 norm bound
+
+    def per_device_expected_energy(beta, comp):
+        # E_A ||(beta/comp_i) A u||^2 = (beta/comp_i)^2 (k/d) (eta tau C1)^2
+        return (beta / comp) ** 2 * (k / d) * ete ** 2
+
+    old_violations = 0
+    for seed in range(25):
+        kg, ke, kp = jax.random.split(jax.random.PRNGKey(seed), 3)
+        gains = channel.sample_gains(kg, r, cfg)
+        est = channel.estimate_gains(ke, gains, cfg)
+        p = channel.sample_power_limits(kp, r, d, cfg)
+        beta_new = power_control.beta_pfels(est, p, d=d, k=k, **kw)
+        e_new = per_device_expected_energy(beta_new, est)
+        assert bool(jnp.all(e_new <= p * (1 + 1e-5))), seed
+        beta_old = power_control.beta_pfels(gains, p, d=d, k=k, **kw)
+        e_old = per_device_expected_energy(beta_old, est)
+        old_violations += int(bool(jnp.any(e_old > p * (1 + 1e-5))))
+    assert old_violations > 0   # the bug was real
+
+
+def test_per_device_energy_statistical_under_imperfect_csi():
+    """Same bound, realized: average per-device energy over many rand-k
+    supports stays <= P_i (tolerance) when beta is designed from the
+    observed gains — the end-to-end form of the regression."""
+    key = jax.random.PRNGKey(11)
+    cfg = ChannelConfig(csi_error=0.3)
+    r, d, k = 4, 512, 128
+    kg, ke, kp, ku = jax.random.split(key, 4)
+    gains = channel.sample_gains(kg, r, cfg)
+    est = channel.estimate_gains(ke, gains, cfg)
+    p = channel.sample_power_limits(kp, r, d, cfg)
+    kw = dict(KW, epsilon=1e9, r=r)
+    beta = power_control.beta_pfels(est, p, d=d, k=k, **kw)
+    u = jax.random.normal(ku, (d,))
+    u = u / jnp.linalg.norm(u) * kw["eta"] * kw["tau"] * kw["c1"]
+    energies = {i: [] for i in range(r)}
+    for s in range(300):
+        idx = randk.sample_indices(jax.random.PRNGKey(s), d, k)
+        proj = randk.project(u, idx)
+        for i in range(r):
+            # the device transmits with its OBSERVED gain
+            x_i = (beta / est[i]) * proj
+            energies[i].append(float(jnp.sum(x_i ** 2)))
+    for i in range(r):
+        assert np.mean(energies[i]) <= float(p[i]) * 1.05, i
+
+
 def test_wfl_pdp_caps_wfl_p():
     key = jax.random.PRNGKey(3)
     cfg = ChannelConfig()
