@@ -167,6 +167,38 @@ def bench_bank_backends(rows, *, t_rounds=6):
                      f"r={cfg.clients_per_round},d={d},ef=on"))
 
 
+def bench_channel_models(rows, *, t_rounds=4):
+    """Channel-registry scenarios (DESIGN.md §11), same cfg/key/data via
+    Trainer.run: the seed block_fading MAC vs the 8-antenna MRC receiver
+    (per-antenna draws + combining + the sqrt(M) noise plumbing) vs
+    Gauss–Markov fading (an (n,) latent carried through the scan) — what
+    opening the scenario axis costs on the round hot path."""
+    import dataclasses
+
+    from repro.configs import ChannelConfig, PFELSConfig
+    from repro.fl import Trainer
+    from repro.fl.api import replace
+
+    cfg = PFELSConfig(num_clients=30, clients_per_round=8, local_steps=3,
+                      rounds=t_rounds)
+    params, d, _, (x, y), loss_fn, _ = _fl_problem(cfg)
+
+    for chan, tag in ((ChannelConfig(), "block_fading"),
+                      (ChannelConfig(model="mimo_mrc", num_antennas=8),
+                       "mimo_mrc[M=8]"),
+                      (ChannelConfig(model="markov_fading",
+                                     markov_rho=0.9), "markov[rho=.9]")):
+        cfg_c = dataclasses.replace(cfg, channel=chan)
+        trainer = Trainer(cfg_c, loss_fn, params)
+        state = replace(trainer.init(jax.random.PRNGKey(1)),
+                        key=jax.random.PRNGKey(2))
+        us = _time(lambda: trainer.run(state, x, y,
+                                       rounds=t_rounds)[0].prev_delta,
+                   reps=3)
+        rows.append((f"chan_{tag}", us,
+                     f"T={t_rounds},r={cfg.clients_per_round},d={d}"))
+
+
 def bench_sharded_round(rows):
     """Sharded cohort round (shard_map over ('pod','data'), DESIGN.md §7)
     vs the vmapped single-device round, same cfg and key, via
@@ -238,6 +270,7 @@ def run():
     bench_pfels_transmit(key, rows)
     bench_round_drivers(rows)
     bench_bank_backends(rows)
+    bench_channel_models(rows)
     bench_sharded_round(rows)
 
     for name, us, derived in rows:

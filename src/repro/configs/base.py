@@ -168,7 +168,17 @@ class CNNConfig:
 
 @dataclass(frozen=True)
 class ChannelConfig:
-    """Wireless flat-fading channel model, paper §8.1."""
+    """Wireless channel scenario (paper §8.1 + the DESIGN.md §11 registry).
+
+    ``model`` selects a registered :mod:`repro.core.channels` entry —
+    ``block_fading`` is the paper's flat block-fading MAC (the default and
+    the bit-exact seed behavior); ``markov_fading`` correlates gains across
+    rounds (Gauss–Markov copula, ``markov_rho``); ``mimo_mrc`` gives the
+    base station ``num_antennas`` receive antennas with maximum-ratio
+    combining; ``dropout`` wraps ``dropout_base`` and zeroes a
+    Bernoulli(``dropout_prob``) subset of the cohort's transmissions.
+    Model-specific fields are ignored by models that don't read them.
+    """
     gain_mean: float = 0.02           # |h| ~ Exp(mean)
     gain_clip: Tuple[float, float] = (1e-4, 0.1)
     noise_std: float = 1.0            # sigma_0
@@ -176,6 +186,50 @@ class ChannelConfig:
     # imperfect CSI (beyond paper — the paper defers this to future work):
     # clients precompensate with h_est = h * (1 + eps), eps ~ N(0, csi_err^2)
     csi_error: float = 0.0
+    # --- scenario selection (DESIGN.md §11) ---
+    model: str = "block_fading"       # repro.core.channels registry key
+    markov_rho: float = 0.9           # AR(1) round-to-round gain correlation
+    num_antennas: int = 4             # M receive antennas (mimo_mrc)
+    dropout_prob: float = 0.1         # P(client drops its transmission)
+    dropout_base: str = "block_fading"  # model the dropout wrapper fades by
+
+    def __post_init__(self):
+        """Reject silently-NaN configurations up front: a swapped
+        ``gain_clip`` used to clamp every gain to the lower bound and feed
+        a nonsensical β design; a non-positive ``noise_std`` makes C2 (and
+        the ε ledger) undefined."""
+        lo, hi = self.gain_clip
+        if not (0.0 < lo < hi):
+            raise ValueError(
+                f"gain_clip must satisfy 0 < lo < hi, got {self.gain_clip}")
+        if self.gain_mean <= 0.0:
+            raise ValueError(f"gain_mean must be > 0, got {self.gain_mean}")
+        if self.noise_std <= 0.0:
+            raise ValueError(
+                f"noise_std (sigma_0) must be > 0, got {self.noise_std}")
+        s_lo, s_hi = self.snr_db_range
+        if not s_lo < s_hi:
+            raise ValueError(
+                f"snr_db_range must be ordered (lo < hi), got "
+                f"{self.snr_db_range}")
+        if self.csi_error < 0.0:
+            raise ValueError(
+                f"csi_error must be >= 0, got {self.csi_error}")
+        if not self.model or not isinstance(self.model, str):
+            raise ValueError(f"model must be a registry name, got "
+                             f"{self.model!r}")
+        if not 0.0 <= self.markov_rho < 1.0:
+            raise ValueError(
+                f"markov_rho must be in [0, 1), got {self.markov_rho}")
+        if self.num_antennas < 1:
+            raise ValueError(
+                f"num_antennas must be >= 1, got {self.num_antennas}")
+        if not 0.0 <= self.dropout_prob < 1.0:
+            raise ValueError(
+                f"dropout_prob must be in [0, 1), got {self.dropout_prob}")
+        if self.dropout_base == "dropout":
+            raise ValueError("dropout_base cannot be 'dropout' (no "
+                             "self-nesting); pick a fading model")
 
 
 @dataclass(frozen=True)

@@ -1,8 +1,8 @@
 """The paper's primary contribution: PFELS — rand_k sparsification, wireless
 channel model, Theorem-5 power control, client-level DP accounting, and
 AirComp aggregation (simulation + production modes)."""
-from repro.core import (aggregation, channel, clipping, power_control,
-                        privacy, randk)
+from repro.core import (aggregation, channel, channels, clipping,
+                        power_control, privacy, randk)
 
-__all__ = ["aggregation", "channel", "clipping", "power_control", "privacy",
-           "randk"]
+__all__ = ["aggregation", "channel", "channels", "clipping", "power_control",
+           "privacy", "randk"]

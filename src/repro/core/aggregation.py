@@ -16,10 +16,21 @@ from repro.kernels.pfels_transmit import ref as transmit_ref
 
 # ------------------------------------------------------------- simulation
 
+def realized_r(tx_mask, r: int):
+    """The server's unscale divisor: the REALIZED transmitter count under
+    a channel-model transmit mask (DESIGN.md §11), floored at 1 so an
+    all-dropped round reconstructs ~zero (noise/(beta)) instead of NaN;
+    the nominal r without a mask."""
+    if tx_mask is None:
+        return r
+    return jnp.maximum(jnp.sum(tx_mask), 1.0)
+
+
 def aircomp_aggregate(updates_flat, idx, gains, beta, noise_key, *,
                       d: int, sigma0: float, r: int,
                       unbiased_rescale: bool = False,
-                      gains_est=None, clip: Optional[float] = None):
+                      gains_est=None, clip: Optional[float] = None,
+                      tx_mask=None):
     """Exact Alg. 2 lines 12–16 (unfused reference path).
 
     updates_flat: (r, d) per-client updates Delta_i; idx: (k,) rand_k subset;
@@ -36,6 +47,12 @@ def aircomp_aggregate(updates_flat, idx, gains, beta, noise_key, *,
     ||Delta|| <= eta tau C1 premise of Theorem 5 even when local training
     overshoots. None disables (seed behavior).
 
+    tx_mask (DESIGN.md §11): optional (r,) 0/1 transmit indicator from the
+    channel model (the ``dropout`` scenario) — masked clients contribute
+    no signal and no energy, and the server unscales by the REALIZED
+    transmitter count instead of the nominal r. None disables (seed
+    behavior).
+
     Returns (delta_hat (d,), energy, y (k,)).
     """
     k = idx.shape[0]
@@ -45,9 +62,11 @@ def aircomp_aggregate(updates_flat, idx, gains, beta, noise_key, *,
     proj = jax.vmap(lambda u: randk.project(u, idx))(updates_flat)  # (r, k)
     comp = gains_est if gains_est is not None else gains
     signals = (beta / comp)[:, None] * proj                         # x_i
+    if tx_mask is not None:
+        signals = signals * tx_mask[:, None]
     noise = sigma0 * jax.random.normal(noise_key, (k,))
     y = chan.receive(signals, gains, noise)                         # (k,)
-    delta_hat = randk.unproject(y, idx, d) / (r * beta)
+    delta_hat = randk.unproject(y, idx, d) / (realized_r(tx_mask, r) * beta)
     if unbiased_rescale:
         delta_hat = delta_hat * (d / k)
     energy = jnp.sum(signals.astype(jnp.float32) ** 2)
@@ -59,18 +78,29 @@ def aircomp_aggregate_fused(updates_flat, idx, gains, beta, noise_key, *,
                             unbiased_rescale: bool = False,
                             gains_est=None, clip: Optional[float] = None,
                             use_kernel: bool = True,
-                            interpret: Optional[bool] = None):
+                            interpret: Optional[bool] = None,
+                            tx_mask=None):
     """Fused-pipeline variant of :func:`aircomp_aggregate` — identical
     contract and PRNG-noise draw, executed by the ``pfels_transmit`` Pallas
     kernel in one pass over tiles of d with no (r, d) sparsified/scaled
     intermediates. ``use_kernel=False`` runs the pure-JAX fused reference
     (ref.py) instead, for parity testing; ``interpret=None`` compiles the
-    kernel on TPU and interprets elsewhere."""
+    kernel on TPU and interprets elsewhere.
+
+    ``tx_mask`` composes with the kernel WITHOUT touching it: masking
+    commutes with the fused pipeline (a zeroed client row clips to scale 1,
+    contributes zero to the MAC sum and zero energy), so the mask is
+    applied to the update rows up front and the realized transmitter count
+    goes in as the unscale divisor — the exact division the unfused
+    reference performs."""
     from repro.kernels.pfels_transmit.ops import fused_transmit
-    return fused_transmit(updates_flat, idx, gains, beta, noise_key, d=d,
-                          sigma0=sigma0, r=r, clip=clip, gains_est=gains_est,
-                          unbiased_rescale=unbiased_rescale,
-                          use_kernel=use_kernel, interpret=interpret)
+    if tx_mask is not None:
+        updates_flat = updates_flat * tx_mask[:, None]
+    return fused_transmit(
+        updates_flat, idx, gains, beta, noise_key, d=d,
+        sigma0=sigma0, r=realized_r(tx_mask, r), clip=clip,
+        gains_est=gains_est, unbiased_rescale=unbiased_rescale,
+        use_kernel=use_kernel, interpret=interpret)
 
 
 def aircomp_aggregate_sharded(updates_local, idx, gains_local, beta,
@@ -79,7 +109,8 @@ def aircomp_aggregate_sharded(updates_local, idx, gains_local, beta,
                               gains_est_local=None,
                               clip: Optional[float] = None,
                               use_kernel: bool = False,
-                              interpret: Optional[bool] = None):
+                              interpret: Optional[bool] = None,
+                              tx_mask_local=None):
     """Sharded-cohort variant of :func:`aircomp_aggregate` (DESIGN.md §7).
 
     Call INSIDE a ``shard_map`` manual region over ``axis_name`` with this
@@ -97,13 +128,19 @@ def aircomp_aggregate_sharded(updates_local, idx, gains_local, beta,
 
     ``beta`` must be the Theorem-5 coefficient computed from the GLOBAL
     gains (it is a min over all r clients — compute it before entering the
-    manual region, or from an all-gather). Returns
-    (delta_hat (d,), energy, y (k,)), all replicated over ``axis_name``.
+    manual region, or from an all-gather). ``tx_mask_local`` is this
+    shard's slice of the channel model's transmit mask (DESIGN.md §11):
+    masked rows contribute nothing to the partial MAC sum or energy, and
+    the realized transmitter count — the unscale divisor — is itself a
+    ``psum`` over the shards. Returns (delta_hat (d,), energy, y (k,)),
+    all replicated over ``axis_name``.
     """
     mask, z_dense = transmit_ref.dense_noise_and_mask(idx, noise_key,
                                                       sigma0, d)
     zeros = jnp.zeros((d,), jnp.float32)
     u = updates_local.astype(jnp.float32)
+    if tx_mask_local is not None:
+        u = u * tx_mask_local[:, None]
     if use_kernel:
         from repro.kernels.pfels_transmit.ops import fused_pipeline
         y_part, e_part = fused_pipeline(
@@ -117,7 +154,11 @@ def aircomp_aggregate_sharded(updates_local, idx, gains_local, beta,
                                                          tx ** 2)
     y_dense = jax.lax.psum(y_part, axis_name) + z_dense
     energy = jax.lax.psum(e_part, axis_name)
-    delta_hat = transmit_ref.server_unscale(y_dense, idx, beta, r, d,
+    r_div = r
+    if tx_mask_local is not None:
+        r_div = jnp.maximum(
+            jax.lax.psum(jnp.sum(tx_mask_local), axis_name), 1.0)
+    delta_hat = transmit_ref.server_unscale(y_dense, idx, beta, r_div, d,
                                             unbiased_rescale)
     return delta_hat, energy, y_dense[idx]
 

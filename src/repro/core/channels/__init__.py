@@ -1,0 +1,28 @@
+"""Pluggable wireless-scenario registry (DESIGN.md §11).
+
+``ChannelConfig.model`` names an entry here; the round body
+(``repro.fl.rounds._build_cohort_core``) consumes the entry's hooks
+instead of hard-coding the paper's flat block-fading MAC. Importing this
+package registers the four built-in scenarios:
+
+  - ``block_fading``  — the paper's i.i.d. flat fading (seed-exact)
+  - ``markov_fading`` — Gauss–Markov gains correlated across rounds
+  - ``mimo_mrc``      — M-antenna base station, maximum-ratio combining
+  - ``dropout``       — Bernoulli transmission dropout over any base model
+"""
+from repro.core.channels.base import (DESIGN_GAIN_BIG, ChannelModel,
+                                      ChannelRound, design_gains,
+                                      effective_noise_std,
+                                      get_channel_model, list_channel_models,
+                                      observed_gains, realized_cohort_size,
+                                      register_channel_model,
+                                      unregister_channel_model)
+from repro.core.channels import (block_fading, dropout, markov,  # noqa: F401
+                                 mimo)
+
+__all__ = [
+    "ChannelModel", "ChannelRound", "DESIGN_GAIN_BIG", "design_gains",
+    "effective_noise_std", "get_channel_model", "list_channel_models",
+    "observed_gains", "realized_cohort_size", "register_channel_model",
+    "unregister_channel_model",
+]

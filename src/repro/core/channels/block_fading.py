@@ -1,0 +1,34 @@
+"""``block_fading`` — the paper's flat block-fading MAC (§4.1, §8.1).
+
+A bit-identical extraction of the pre-registry round body: gains are
+redrawn i.i.d. every round from ``core.channel.sample_gains`` on the
+round's gains lane, the CSI view comes from ``core.channel.estimate_gains``
+on the csi lane (skipped entirely under perfect CSI), every sampled client
+transmits, and the receiver noise is the raw ``sigma_0``. The golden tier
+(``tests/test_golden.py``) pins this equivalence against digests generated
+from the pre-registry tree.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ChannelConfig
+from repro.core import channel
+from repro.core.channels.base import (ChannelModel, ChannelRound,
+                                      register_channel_model)
+
+
+def _init(key, n: int, cfg: ChannelConfig):
+    return None
+
+
+def _step(carry, cfg: ChannelConfig, r: int, sel, gains_key, csi_key):
+    gains = channel.sample_gains(gains_key, r, cfg)
+    obs = (channel.estimate_gains(csi_key, gains, cfg)
+           if cfg.csi_error > 0 else None)
+    return carry, ChannelRound(gains=gains, gains_obs=obs)
+
+
+MODEL = register_channel_model("block_fading", ChannelModel(
+    name="block_fading",
+    init=_init,
+    step=_step,
+    noise_std=lambda cfg: cfg.noise_std))

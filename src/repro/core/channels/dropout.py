@@ -1,0 +1,56 @@
+"""``dropout`` — Bernoulli client dropout over any base fading model.
+
+Real cohorts lose clients between sampling and transmission (battery,
+backhaul, local-training stragglers). The wrapper fades by
+``cfg.dropout_base`` (any registered non-dropout model) and zeroes a
+Bernoulli(``cfg.dropout_prob``) subset of the cohort's transmissions via
+``ChannelRound.tx_mask``, which exercises the r-realized-vs-r-nominal
+path end to end: β-design mins over the *realized* transmitters only
+(dropped clients transmit nothing, so their power limits cannot bind —
+``base.design_gains``), the server unscales the AirComp sum by the
+realized count (``aggregation``'s ``tx_mask`` paths), and with error
+feedback a dropped client's entire update stays in its residual memory.
+
+PRNG (DESIGN.md §5): the Bernoulli draw derives from the round's gains
+lane by ``fold_in`` (the documented way to add a draw without widening
+the 7-lane split), so the base model's gain stream is untouched — a
+``dropout``-wrapped round sees the exact gains of its base model.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ChannelConfig
+from repro.core.channels.base import (ChannelModel, ChannelRound,
+                                      get_channel_model,
+                                      register_channel_model)
+
+_MASK_TAG = 0x44524F50  # "DROP": the fold_in stream for the Bernoulli draw
+
+
+def _base(cfg: ChannelConfig) -> ChannelModel:
+    base = get_channel_model(cfg.dropout_base)
+    if base.name == "dropout":
+        raise ValueError("dropout cannot wrap itself")
+    return base
+
+
+def _init(key, n: int, cfg: ChannelConfig):
+    return _base(cfg).init(key, n, cfg)
+
+
+def _step(carry, cfg: ChannelConfig, r: int, sel, gains_key, csi_key):
+    carry, cr = _base(cfg).step(carry, cfg, r, sel, gains_key, csi_key)
+    keep = jax.random.bernoulli(
+        jax.random.fold_in(gains_key, _MASK_TAG),
+        1.0 - cfg.dropout_prob, (r,))
+    return carry, cr._replace(tx_mask=keep.astype("float32"))
+
+
+MODEL = register_channel_model("dropout", ChannelModel(
+    name="dropout",
+    init=_init,
+    step=_step,
+    noise_std=lambda cfg: _base(cfg).noise_std(cfg),
+    stateful=lambda cfg: _base(cfg).stateful(cfg),
+    may_mask=lambda cfg: True))

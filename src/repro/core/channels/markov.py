@@ -1,0 +1,64 @@
+"""``markov_fading`` — Gauss–Markov gains correlated across rounds.
+
+LDP-over-wireless analyses hinge on how fading correlates across rounds
+("Wireless Federated Learning with Local Differential Privacy"): a client
+whose channel is deep in a fade this round is likely still there next
+round, so the worst-client β floor persists instead of averaging out.
+
+Construction (Gaussian copula over the paper's marginal): each client i
+carries a latent AR(1) state
+
+    z_i^{t+1} = rho * z_i^t + sqrt(1 - rho^2) * xi_i^t,   xi ~ N(0, 1)
+
+with ``rho = cfg.markov_rho`` and stationary N(0, 1) marginal, mapped
+through the standard-normal CDF and the Exponential(``gain_mean``)
+quantile function to the paper's gain law, then clipped to ``gain_clip``
+— so every round's marginal gain distribution matches ``block_fading``
+exactly while round-to-round gains correlate.
+
+State: the (n,) latent vector for the WHOLE population (every client's
+physical channel evolves every round, sampled or not). It lives in
+``TrainState.chan``, evolves from the round's gains lane under both bank
+backends (same key, same ops — bit parity), and is (n,)-sized, so it
+respects the §10 rule that only O(n) vectors scale with the population.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ChannelConfig
+from repro.core import channel
+from repro.core.channels.base import (ChannelModel, ChannelRound,
+                                      register_channel_model)
+
+
+def _gains_from_latent(z, cfg: ChannelConfig):
+    """N(0,1) latent -> Exponential(gain_mean) marginal, clipped — the
+    copula transform (u -> -mean*log(1-u) is the Exp quantile)."""
+    u = jax.scipy.special.ndtr(z)
+    g = -cfg.gain_mean * jnp.log1p(-u)
+    return jnp.clip(g, cfg.gain_clip[0], cfg.gain_clip[1])
+
+
+def _init(key, n: int, cfg: ChannelConfig):
+    # stationary start: z ~ N(0, 1) per client
+    return jax.random.normal(key, (n,), jnp.float32)
+
+
+def _step(carry, cfg: ChannelConfig, r: int, sel, gains_key, csi_key):
+    rho = jnp.float32(cfg.markov_rho)
+    xi = jax.random.normal(gains_key, carry.shape, jnp.float32)
+    z = rho * carry + jnp.sqrt(1.0 - rho * rho) * xi
+    gains = _gains_from_latent(z[sel], cfg)
+    obs = (channel.estimate_gains(csi_key, gains, cfg)
+           if cfg.csi_error > 0 else None)
+    return z, ChannelRound(gains=gains, gains_obs=obs)
+
+
+MODEL = register_channel_model("markov_fading", ChannelModel(
+    name="markov_fading",
+    init=_init,
+    step=_step,
+    noise_std=lambda cfg: cfg.noise_std,
+    stateful=lambda cfg: True))

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PFELSConfig
-from repro.core import aggregation, power_control, privacy, randk
+from repro.core import aggregation, channels, power_control, privacy, randk
 
 
 @dataclass(frozen=True)
@@ -108,10 +108,14 @@ def _dp_epsilon_spend(cfg: PFELSConfig, beta):
     """Per-round eps actually consumed (Thm 3 inverse) for the realized
     beta, capped at the configured budget — Theorem 5 already enforces
     ``C2 * beta <= eps``, so the cap only absorbs fp rounding (and matches
-    the host-side ledger convention of the legacy drivers)."""
+    the host-side ledger convention of the legacy drivers). C2 is built
+    from the channel model's POST-COMBINING noise std (DESIGN.md §11):
+    a multi-antenna receiver changes the intrinsic noise the guarantee
+    rides on, and the ledger must charge against that operating point."""
     c2 = privacy.c2_coefficient(
         cfg.local_lr, cfg.local_steps, cfg.clip, cfg.clients_per_round,
-        cfg.num_clients, cfg.resolved_delta(), cfg.channel.noise_std)
+        cfg.num_clients, cfg.resolved_delta(),
+        channels.effective_noise_std(cfg.channel))
     return jnp.minimum(jnp.float32(c2) * beta, jnp.float32(cfg.epsilon))
 
 
@@ -146,11 +150,15 @@ def _full_support(cfg: PFELSConfig, d: int, k: int, prev_delta, key):
 
 
 def _pfels_beta(cfg: PFELSConfig, gains, power_limits, d: int, k: int):
+    """``gains`` are the channel model's EFFECTIVE observed gains (the
+    design view of DESIGN.md §11); the privacy cap inside Theorem 5 uses
+    the post-combining noise std for the same reason as the ledger."""
     return power_control.beta_pfels(
         gains, power_limits, d=d, k=k, c1=cfg.clip, eta=cfg.local_lr,
         tau=cfg.local_steps, epsilon=cfg.epsilon,
         r=cfg.clients_per_round, n=cfg.num_clients,
-        delta=cfg.resolved_delta(), sigma0=cfg.channel.noise_std)
+        delta=cfg.resolved_delta(),
+        sigma0=channels.effective_noise_std(cfg.channel))
 
 
 def _wfl_p_beta(cfg: PFELSConfig, gains, power_limits, d: int, k: int):
@@ -164,7 +172,8 @@ def _wfl_pdp_beta(cfg: PFELSConfig, gains, power_limits, d: int, k: int):
         gains, power_limits, c1=cfg.clip, eta=cfg.local_lr,
         tau=cfg.local_steps, epsilon=cfg.epsilon,
         r=cfg.clients_per_round, n=cfg.num_clients,
-        delta=cfg.resolved_delta(), sigma0=cfg.channel.noise_std)
+        delta=cfg.resolved_delta(),
+        sigma0=channels.effective_noise_std(cfg.channel))
 
 
 def _dp_fedavg_aggregate(cfg: PFELSConfig, flat_updates, noise_key, *,

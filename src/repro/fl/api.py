@@ -51,7 +51,7 @@ from jax.sharding import Mesh
 import numpy as np
 
 from repro.configs.base import PFELSConfig
-from repro.core import privacy
+from repro.core import channels, privacy
 from repro.data import loader
 from repro.fl import algorithms, rounds
 from repro.fl import bank as bank_lib
@@ -59,6 +59,9 @@ from repro.fl import bank as bank_lib
 # init derives the round-key stream by folding this tag into the init key,
 # so power-limit sampling and the training stream never share a key
 _RUN_STREAM_TAG = 0x5047  # "PG"
+# ...and the channel model's init state gets its own fork for the same
+# reason (markov_fading's stationary start must not alias either stream)
+_CHAN_STREAM_TAG = 0x4348  # "CH"
 
 
 @dataclass
@@ -72,7 +75,11 @@ class TrainState:
     ALL per-client persistent state (error-feedback residuals, PRNG
     lanes, participation counts; DESIGN.md §10) — device arrays under the
     ``resident`` backend, host numpy under ``streamed``. ``prev_delta``
-    starts at zeros (the documented server_topk cold start).
+    starts at zeros (the documented server_topk cold start). ``chan`` is
+    the channel model's cross-round carry (DESIGN.md §11) — ``None`` for
+    stateless models (block_fading, mimo_mrc), the population's latent
+    fading state for markov_fading — always device-resident, under both
+    bank backends.
     """
     params: Any                       # model pytree
     power_limits: jnp.ndarray         # (N,) P_i, fixed per device
@@ -81,6 +88,8 @@ class TrainState:
     key: jnp.ndarray                  # PRNG key the NEXT step/run consumes
     round: jnp.ndarray                # i32 scalar, rounds completed
     ledger: privacy.LedgerState       # in-graph (eps, delta) accumulators
+    chan: Any = None                  # channel-model carry (DESIGN.md §11;
+    #                                   None for stateless models)
 
     @property
     def residuals(self) -> Optional[jnp.ndarray]:
@@ -93,7 +102,7 @@ class TrainState:
 jax.tree_util.register_dataclass(
     TrainState,
     data_fields=["params", "power_limits", "bank", "prev_delta",
-                 "key", "round", "ledger"],
+                 "key", "round", "ledger", "chan"],
     meta_fields=[])
 
 
@@ -120,6 +129,7 @@ class Trainer:
         self.cfg = cfg
         self.loss_fn = loss_fn
         self.algorithm = algorithms.get_algorithm(cfg.algorithm)
+        self.channel_model = channels.get_channel_model(cfg.channel.model)
         flat, unravel = ravel_pytree(params_template)
         self.d = int(flat.shape[0])
         self.unravel = unravel
@@ -147,9 +157,10 @@ class Trainer:
 
     def init(self, key, params: Any = None) -> TrainState:
         """Fresh TrainState: power limits drawn from ``key`` (the same draw
-        as the legacy ``setup``), zeroed ledger/bank/prev_delta, and the
-        round-key stream forked off ``key`` (never reusing the power-limit
-        draw)."""
+        as the legacy ``setup``), zeroed ledger/bank/prev_delta, the
+        channel model's cross-round state initialized from its own fork of
+        ``key`` (None for stateless models), and the round-key stream
+        forked off ``key`` (never reusing the power-limit draw)."""
         params = self._params_template if params is None else params
         return TrainState(
             params=params,
@@ -158,15 +169,18 @@ class Trainer:
             prev_delta=jnp.zeros((self.d,), jnp.float32),
             key=jax.random.fold_in(key, _RUN_STREAM_TAG),
             round=jnp.zeros((), jnp.int32),
-            ledger=privacy.ledger_init())
+            ledger=privacy.ledger_init(),
+            chan=self.channel_model.init(
+                jax.random.fold_in(key, _CHAN_STREAM_TAG),
+                self.cfg.num_clients, self.cfg.channel))
 
     def _advance(self, state: TrainState, n: int, params, bank,
-                 prev_delta, ledger) -> TrainState:
+                 prev_delta, ledger, chan) -> TrainState:
         return TrainState(
             params=params, power_limits=state.power_limits,
             bank=bank, prev_delta=prev_delta,
             key=jax.random.fold_in(state.key, n),
-            round=state.round + n, ledger=ledger)
+            round=state.round + n, ledger=ledger, chan=chan)
 
     def _spend(self, ledger, metrics):
         """Ledger update + the uniform ``eps_round`` metric. Whether the
@@ -184,30 +198,33 @@ class Trainer:
 
     # ------------------------------------------------------------- loops
 
-    def _bank_round(self, params, power_limits, bank, prev_delta,
+    def _bank_round(self, params, power_limits, bank, prev_delta, chan,
                     data_x, data_y, round_key):
         """One round against the in-graph (resident) bank: sample the
-        cohort, gather its slices, run the cohort core, scatter the
-        residual slice + this round's bank lanes back (DESIGN.md §10)."""
+        cohort, gather its slices, run the cohort core (which also evolves
+        the channel-model carry, DESIGN.md §11), scatter the residual
+        slice + this round's bank lanes back (DESIGN.md §10)."""
         ks = rounds.split_round_key(round_key)
         sel = rounds.sample_cohort(ks[0], self.cfg.num_clients,
                                    self.cfg.clients_per_round)
         res_sel = self.bank.gather(bank, sel)
-        new_params, metrics, new_res_sel, delta_hat = self._cohort_core(
-            params, power_limits[sel], data_x[sel], data_y[sel], ks,
-            res_sel, prev_delta)
+        new_params, metrics, new_res_sel, delta_hat, new_chan = \
+            self._cohort_core(
+                params, power_limits[sel], data_x[sel], data_y[sel], ks,
+                res_sel, prev_delta, chan, sel)
         lanes = bank_lib.cohort_lane_keys(
             ks[rounds.ROUND_KEY_LANES["bank"]], sel)
         new_bank = self.bank.scatter(bank, sel, new_res_sel, lanes)
-        return new_params, metrics, new_bank, delta_hat
+        return new_params, metrics, new_bank, delta_hat, new_chan
 
     def _step_impl(self, state: TrainState, data_x, data_y):
-        new_params, metrics, new_bank, delta_hat = self._bank_round(
-            state.params, state.power_limits, state.bank, state.prev_delta,
-            data_x, data_y, state.key)
+        new_params, metrics, new_bank, delta_hat, new_chan = \
+            self._bank_round(
+                state.params, state.power_limits, state.bank,
+                state.prev_delta, state.chan, data_x, data_y, state.key)
         ledger, metrics = self._spend(state.ledger, metrics)
         return self._advance(state, 1, new_params, new_bank, delta_hat,
-                             ledger), metrics
+                             ledger, new_chan), metrics
 
     def run(self, state: TrainState, data_x, data_y=None,
             rounds: Optional[int] = None):
@@ -236,19 +253,19 @@ class Trainer:
 
     def _run_impl(self, state: TrainState, data_x, data_y, t_rounds: int):
         def body(carry, round_key):
-            p, bank, prev, ledger = carry
-            p2, metrics, bank2, delta_hat = self._bank_round(
-                p, state.power_limits, bank, prev, data_x, data_y,
+            p, bank, prev, ledger, chan = carry
+            p2, metrics, bank2, delta_hat, chan2 = self._bank_round(
+                p, state.power_limits, bank, prev, chan, data_x, data_y,
                 round_key)
             ledger, metrics = self._spend(ledger, metrics)
-            return (p2, bank2, delta_hat, ledger), metrics
+            return (p2, bank2, delta_hat, ledger, chan2), metrics
 
         keys = jax.random.split(state.key, t_rounds)
-        (p_f, bank_f, delta_f, ledger_f), metrics = jax.lax.scan(
+        (p_f, bank_f, delta_f, ledger_f, chan_f), metrics = jax.lax.scan(
             body, (state.params, state.bank, state.prev_delta,
-                   state.ledger), keys)
+                   state.ledger, state.chan), keys)
         return self._advance(state, t_rounds, p_f, bank_f, delta_f,
-                             ledger_f), metrics
+                             ledger_f, chan_f), metrics
 
     # ------------------------------------------------- streamed execution
 
@@ -261,15 +278,15 @@ class Trainer:
         donation could never be honored."""
         if self._cohort_step_jit is None:
             def step_fn(params, p_sel, cx, cy, ks, sel, res_sel,
-                        prev_delta, ledger):
-                new_params, metrics, new_res_sel, delta_hat = \
+                        prev_delta, ledger, chan):
+                new_params, metrics, new_res_sel, delta_hat, new_chan = \
                     self._cohort_core(params, p_sel, cx, cy, ks, res_sel,
-                                      prev_delta)
+                                      prev_delta, chan, sel)
                 ledger, metrics = self._spend(ledger, metrics)
                 lanes = bank_lib.cohort_lane_keys(
                     ks[rounds.ROUND_KEY_LANES["bank"]], sel)
                 return (new_params, metrics, new_res_sel, lanes, delta_hat,
-                        ledger)
+                        ledger, new_chan)
 
             self._cohort_step_jit = jax.jit(step_fn, donate_argnums=(6,))
         return self._cohort_step_jit
@@ -300,6 +317,7 @@ class Trainer:
         bank = self.bank.clone(state.bank)   # callers keep their state
         params, prev_delta, ledger = state.params, state.prev_delta, \
             state.ledger
+        chan = state.chan                    # device-resident model carry
         per_round = []
         prefetch = loader.prefetch_cohorts(source, sels_np)
         for ti, (cx, cy) in enumerate(prefetch):
@@ -307,15 +325,16 @@ class Trainer:
             res_sel = self.bank.gather(bank, sel)
             if res_sel is not None:
                 res_sel = jnp.asarray(res_sel)
-            params, metrics, new_res_sel, lanes, prev_delta, ledger = \
-                step_fn(params, jnp.asarray(state.power_limits)[sel],
-                        cx, cy, ks_all[ti], jnp.asarray(sel), res_sel,
-                        prev_delta, ledger)
+            params, metrics, new_res_sel, lanes, prev_delta, ledger, \
+                chan = step_fn(
+                    params, jnp.asarray(state.power_limits)[sel],
+                    cx, cy, ks_all[ti], jnp.asarray(sel), res_sel,
+                    prev_delta, ledger, chan)
             bank = self.bank.scatter(bank, sel, new_res_sel, lanes)
             per_round.append(metrics)
         stacked = {k: np.stack([np.asarray(m[k]) for m in per_round])
                    for k in per_round[0]}
-        return params, stacked, bank, prev_delta, ledger
+        return params, stacked, bank, prev_delta, ledger, chan
 
     def _run_streamed(self, state: TrainState, data_x, data_y, t: int):
         if t < 1:
@@ -325,20 +344,20 @@ class Trainer:
                 "with rounds >= 1")
         source = loader.as_cohort_source(data_x, data_y)
         keys = jax.random.split(state.key, t)
-        params, metrics, bank, prev_delta, ledger = self._streamed_rounds(
-            state, source, keys)
+        params, metrics, bank, prev_delta, ledger, chan = \
+            self._streamed_rounds(state, source, keys)
         return self._advance(state, t, params, bank, prev_delta,
-                             ledger), metrics
+                             ledger, chan), metrics
 
     def _streamed_step_api(self, state: TrainState, data_x, data_y=None):
         """Streamed ``step``: consumes ``state.key`` whole as the round
         key (the resident/legacy schedule), not ``split(key, 1)``."""
         source = loader.as_cohort_source(data_x, data_y)
-        params, metrics, bank, prev_delta, ledger = self._streamed_rounds(
-            state, source, state.key[None])
+        params, metrics, bank, prev_delta, ledger, chan = \
+            self._streamed_rounds(state, source, state.key[None])
         metrics = {k: v[0] for k, v in metrics.items()}
         return self._advance(state, 1, params, bank, prev_delta,
-                             ledger), metrics
+                             ledger, chan), metrics
 
     # ------------------------------------------------------- conveniences
 

@@ -35,7 +35,7 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import PFELSConfig
-from repro.core import aggregation, channel, privacy, randk
+from repro.core import aggregation, channel, channels, privacy, randk
 from repro.fl import algorithms
 from repro.fl.client import local_train, model_update
 from repro.kernels.pfels_transmit import ref as transmit_ref
@@ -51,7 +51,8 @@ _COHORT_AXES = ("pod", "data")
 ROUND_KEY_LANES = {
     "selection": 0,      # Alg. 2 line 2 client sampling
     "client_train": 1,   # per-client local-training keys
-    "gains": 2,          # channel gains |h_i| for the round
+    "gains": 2,          # channel-model step: gains (+ fold_in-derived
+                         # draws such as the dropout mask, DESIGN.md §11)
     "support": 3,        # rand-k support omega_t
     "channel_noise": 4,  # receiver noise (or digital-aggregation noise)
     "bank": 5,           # ClientBank per-client lanes (DESIGN.md §10)
@@ -132,12 +133,22 @@ def _cohort_shards(cfg: PFELSConfig, mesh: Optional[Mesh]) -> int:
 def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                        unravel: Callable, mesh: Optional[Mesh] = None):
     """The raw (un-jitted) round body on COHORT slices, uniform across
-    algorithms: ``cohort_core(params, p_sel, cx, cy, ks, res_sel,
-    prev_delta) -> (new_params, metrics, new_res_sel, delta_hat)`` where
-    every client-indexed input/output is the sampled r-client slice —
-    ``p_sel`` (r,), ``cx``/``cy`` (r, samples, ...), ``res_sel`` (r, d) or
-    None — and ``ks`` is the ``split_round_key`` output (lanes 1-6
-    consumed here; selection/bank lanes 0 and 5 belong to the caller).
+    algorithms AND channel models: ``cohort_core(params, p_sel, cx, cy,
+    ks, res_sel, prev_delta, chan_carry, sel) -> (new_params, metrics,
+    new_res_sel, delta_hat, new_chan_carry)`` where every client-indexed
+    input/output is the sampled r-client slice — ``p_sel`` (r,),
+    ``cx``/``cy`` (r, samples, ...), ``res_sel`` (r, d) or None — and
+    ``ks`` is the ``split_round_key`` output (lanes 1-6 consumed here;
+    selection/bank lanes 0 and 5 belong to the caller).
+
+    The wireless scenario resolves through the ``repro.core.channels``
+    registry (DESIGN.md §11): ``chan_carry`` is the model's cross-round
+    state pytree (None for stateless models) and ``sel`` the sampled
+    client ids (stateful models index their per-client state by id).
+    The model's ``step`` consumes the gains/csi lanes, its post-combining
+    ``noise_std`` replaces the raw sigma_0 everywhere (receiver draw, β
+    privacy cap via the registry hooks, ledger spend), and its optional
+    transmit mask routes the realized-r aggregation paths.
 
     Population tensors never enter: this is what lets the streamed
     ClientBank (DESIGN.md §10) run the identical compiled body on
@@ -147,7 +158,9 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
     docstring)."""
     k_coords = max(int(round(cfg.compression_ratio * d)), 1)
     alg = algorithms.get_algorithm(cfg.algorithm)
-    sigma0 = cfg.channel.noise_std
+    chan_model = channels.get_channel_model(cfg.channel.model)
+    sigma0 = chan_model.noise_std(cfg.channel)
+    has_mask = chan_model.may_mask(cfg.channel)
     r = cfg.clients_per_round
     aircomp = alg.aircomp
     n_shards = _cohort_shards(cfg, mesh)
@@ -165,19 +178,22 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         flat = jax.vmap(lambda u: ravel_pytree(u)[0])(updates)
         return flat, losses
 
-    def support_and_beta(gains_obs, p_sel, prev_delta, idx_key):
+    def support_and_beta(gains_design, p_sel, prev_delta, idx_key):
         """Registry hooks: support omega_t + β-design, from the GLOBAL (r,)
-        gains — shared by both execution paths. ``gains_obs`` must be the
-        gains the devices actually OBSERVE (``gains_est`` under imperfect
-        CSI): each device transmits ``x_i = (beta/h_i^est) A Delta_i``, so
-        its energy is ``(beta/h_i^est)^2 ||A Delta_i||^2`` and the Eq. 34c
-        power cap only bounds it by ``P_i`` when beta is designed from
-        ``h^est`` — designing from the true gains violated ``P_i``
-        whenever ``h_i < h_i^est`` (regression-tested in
-        tests/test_power_control.py)."""
+        gains — shared by both execution paths. ``gains_design`` must be
+        ``channels.design_gains(cr)``: the gains the devices actually
+        OBSERVE (``gains_obs`` under imperfect CSI — each device transmits
+        ``x_i = (beta/h_i^est) A Delta_i``, so its energy is
+        ``(beta/h_i^est)^2 ||A Delta_i||^2`` and the Eq. 34c power cap
+        only bounds it by ``P_i`` when beta is designed from ``h^est``;
+        designing from the true gains violated ``P_i`` whenever
+        ``h_i < h_i^est``, regression-tested in
+        tests/test_power_control.py), with dropped-out clients lifted so
+        they never bind the min (they transmit nothing — the realized-r
+        side of the DESIGN.md §11 mask contract)."""
         idx, k_used = alg.select_support(cfg, d, k_coords, prev_delta,
                                          idx_key)
-        beta = alg.design_beta(cfg, gains_obs, p_sel, d, k_used)
+        beta = alg.design_beta(cfg, gains_design, p_sel, d, k_used)
         return idx, beta, k_used
 
     cohort_apply = None
@@ -185,7 +201,7 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         spec_c = P(_COHORT_AXES)
 
         def cohort_body(params, cx_l, cy_l, ck_l, res_l, gains_l, gest_l,
-                        idx, beta, noise_key):
+                        mask_l, idx, beta, noise_key):
             # inside the manual region: sharding constraints must not
             # re-reference the cohort axes
             with rules.exclude_axes(*_COHORT_AXES):
@@ -211,7 +227,8 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                     gains_est_local=(gest_l if cfg.channel.csi_error > 0
                                      else None),
                     clip=agg_clip,
-                    use_kernel=cfg.use_fused_kernel)
+                    use_kernel=cfg.use_fused_kernel,
+                    tx_mask_local=(mask_l if has_mask else None))
             else:
                 # dp_fedavg / fedavg aggregate on the gathered updates
                 # outside the manual region; only training is sharded
@@ -222,28 +239,41 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         cohort_apply = shard_map_compat(
             cohort_body, mesh,
             in_specs=(P(), spec_c, spec_c, spec_c, spec_c, spec_c, spec_c,
-                      P(), P(), P()),
+                      spec_c, P(), P(), P()),
             out_specs=(spec_c, spec_c, spec_c, P(), P()))
 
     def cohort_core(params, p_sel, cx, cy, ks, res_sel=None,
-                    prev_delta=None):
+                    prev_delta=None, chan_carry=None, sel=None):
         ck = jax.random.split(ks[1], r)
 
-        # ---- channel state for this round (§4.1); imperfect CSI (beyond
-        # paper): clients precompensate with noisy gain estimates while the
-        # MAC applies the true gains
-        gains = channel.sample_gains(ks[2], r, cfg.channel)
-        gains_est = channel.estimate_gains(ks[6], gains, cfg.channel)
+        # ---- channel realization for this round (DESIGN.md §11): the
+        # registered model consumes the gains/csi lanes and evolves its
+        # cross-round carry; imperfect CSI (beyond paper): clients
+        # precompensate with noisy gain estimates while the MAC applies
+        # the true gains
+        new_chan_carry, cr = chan_model.step(
+            chan_carry, cfg.channel, r, sel, ks[2], ks[6])
+        if cr.tx_mask is not None and not has_mask:
+            # a silent discard here would let beta design / r_realized see
+            # the mask while aggregation ignores it — contradictory
+            # numerics; fail at trace time instead
+            raise ValueError(
+                f"channel model {chan_model.name!r} returned a tx_mask "
+                f"but its may_mask(cfg) hook says False — the mask "
+                f"plumbing is gated on may_mask (DESIGN.md §11)")
+        gains = cr.gains
+        gains_obs = channels.observed_gains(cr)
+        tx_mask = cr.tx_mask
 
         idx = beta = None
         k_used = d
         if aircomp:
-            # beta designed from what the devices observe (gains_est ==
+            # beta designed from what the devices observe (gains_obs ==
             # gains under perfect CSI) — the power cap must hold for the
-            # precompensation the devices actually apply
+            # precompensation the devices actually apply — with dropped
+            # clients lifted out of the min (design_gains)
             idx, beta, k_used = support_and_beta(
-                gains_est if cfg.channel.csi_error > 0 else gains,
-                p_sel, prev_delta, ks[3])
+                channels.design_gains(cr), p_sel, prev_delta, ks[3])
 
         # ---- local training (lines 5-11) + error feedback [28-30]
         # (beyond-paper option): add each selected client's residual memory
@@ -257,7 +287,9 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                      else jnp.zeros((r, d), jnp.float32))
             flat_updates, losses, scales_sh, delta_sh, energy_sh = \
                 cohort_apply(
-                    params, cx, cy, ck, res_l, gains, gains_est,
+                    params, cx, cy, ck, res_l, gains, gains_obs,
+                    (tx_mask if tx_mask is not None
+                     else jnp.ones((r,), jnp.float32)),
                     idx if idx is not None else jnp.arange(1),
                     beta if beta is not None else jnp.asarray(1.0,
                                                               jnp.float32),
@@ -275,6 +307,9 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
             "train_loss": jnp.mean(losses),
             "update_norm": jnp.mean(
                 jnp.linalg.norm(flat_updates, axis=1)),
+            # == r unless the channel model masks transmissions (dropout):
+            # the realized transmitter count of the DESIGN.md §11 contract
+            "r_realized": channels.realized_cohort_size(cr, r),
         }
 
         if aircomp:
@@ -299,14 +334,28 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                     agg_updates, idx, gains, beta, ks[4], d=d,
                     sigma0=sigma0, r=r,
                     unbiased_rescale=cfg.unbiased_rescale,
-                    gains_est=(gains_est if cfg.channel.csi_error > 0
+                    gains_est=(cr.gains_obs if cfg.channel.csi_error > 0
                                else None),
-                    clip=agg_clip)
+                    clip=agg_clip, tx_mask=tx_mask)
             metrics.update(beta=beta, energy=energy,
                            subcarriers=jnp.asarray(k_used))
         else:   # digital server-side aggregation (registry hook)
-            delta_hat = alg.server_aggregate(cfg, flat_updates, ks[4],
+            # a dropped client uploads nothing in the digital schemes too
+            agg_in = (flat_updates * tx_mask[:, None]
+                      if tx_mask is not None else flat_updates)
+            delta_hat = alg.server_aggregate(cfg, agg_in, ks[4],
                                              d=d, r=r)
+            if tx_mask is not None:
+                # same realized-r contract as the AirComp paths: the hook
+                # averaged over the nominal r, so rescale to the mean of
+                # the updates actually RECEIVED (for dp_fedavg this also
+                # scales its noise by r/r_eff >= 1 — conservative). An
+                # all-dropped round received NOTHING: apply no update
+                # rather than an r-fold-amplified pure-noise step
+                delta_hat = jnp.where(
+                    jnp.sum(tx_mask) > 0,
+                    delta_hat * (r / aggregation.realized_r(tx_mask, r)),
+                    jnp.zeros_like(delta_hat))
             metrics.update(beta=jnp.asarray(0.0), energy=jnp.asarray(0.0),
                            subcarriers=jnp.asarray(d))
 
@@ -326,12 +375,17 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                 # computed once by whichever path aggregated (both set it
                 # under exactly this transmit_clip + error_feedback case)
                 transmitted = transmitted * transmit_scales[:, None]
+            if tx_mask is not None:
+                # a dropped client transmitted NOTHING: its whole update
+                # stays in the residual memory for its next participation
+                transmitted = transmitted * tx_mask[:, None]
             new_res_sel = flat_updates - transmitted
 
         # ---- server update (line 16)
         flat_params, _ = ravel_pytree(params)
         new_flat = flat_params + delta_hat
-        return unravel(new_flat), metrics, new_res_sel, delta_hat
+        return unravel(new_flat), metrics, new_res_sel, delta_hat, \
+            new_chan_carry
 
     return cohort_core
 
@@ -359,9 +413,12 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         res_sel = (residuals[sel]
                    if cfg.error_feedback and residuals is not None
                    else None)
-        new_params, metrics, new_res_sel, delta_hat = cohort_core(
+        # the legacy contract has nowhere to carry cross-round channel
+        # state; stateless models take carry=None (make_round_fn /
+        # make_training_fn reject stateful ones up front)
+        new_params, metrics, new_res_sel, delta_hat, _ = cohort_core(
             params, power_limits[sel], data_x[sel], data_y[sel], ks,
-            res_sel, prev_delta)
+            res_sel, prev_delta, None, sel)
         new_residuals = residuals
         if new_res_sel is not None and residuals is not None:
             new_residuals = residuals.at[sel].set(new_res_sel)
@@ -377,6 +434,19 @@ def _legacy_trainer(cfg: PFELSConfig, loss_fn: Callable, d: int,
     from repro.fl.api import Trainer
     return Trainer(cfg, loss_fn, unravel(jnp.zeros((d,), jnp.float32)),
                    mesh=mesh)
+
+
+def _reject_stateful_channel(cfg: PFELSConfig, shim: str):
+    """The deprecated shims carry no cross-round channel state — a
+    stateful channel model (markov_fading) would silently re-initialize
+    every round, so they refuse it; the Trainer carries it in
+    ``TrainState.chan`` (DESIGN.md §11)."""
+    model = channels.get_channel_model(cfg.channel.model)
+    if model.stateful(cfg.channel):
+        raise ValueError(
+            f"channel model {cfg.channel.model!r} is stateful and the "
+            f"deprecated {shim} has nowhere to carry its cross-round "
+            f"state; use repro.fl.Trainer (DESIGN.md §11)")
 
 
 def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
@@ -399,6 +469,7 @@ def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
     warnings.warn(
         "repro.fl.make_round_fn is deprecated; use repro.fl.Trainer.step "
         "(DESIGN.md §8)", DeprecationWarning, stacklevel=2)
+    _reject_stateful_channel(cfg, "make_round_fn")
     trainer = _legacy_trainer(cfg, loss_fn, d, unravel, mesh)
     core = trainer._core
     leaks_delta_hat = (cfg.randk_mode == "server_topk"
@@ -443,6 +514,7 @@ def make_training_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
     warnings.warn(
         "repro.fl.make_training_fn is deprecated; use repro.fl.Trainer.run "
         "(DESIGN.md §8)", DeprecationWarning, stacklevel=2)
+    _reject_stateful_channel(cfg, "make_training_fn")
     t_rounds = cfg.rounds if rounds is None else rounds
     trainer = _legacy_trainer(cfg, loss_fn, d, unravel, mesh)
     core = trainer._core
@@ -469,11 +541,15 @@ def make_training_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
 
 
 def round_epsilon_spent(cfg: PFELSConfig, beta: float) -> float:
-    """Per-round eps actually consumed (Thm 3 inverse), for the ledger."""
+    """Per-round eps actually consumed (Thm 3 inverse), for the ledger.
+    Uses the channel model's POST-COMBINING noise std (== the raw sigma_0
+    for single-antenna models): the intrinsic noise that actually
+    perturbs the aggregate is what the DP guarantee rides on
+    (DESIGN.md §11)."""
     return privacy.round_epsilon(
         beta, cfg.local_lr, cfg.local_steps, cfg.clip,
         cfg.clients_per_round, cfg.num_clients, cfg.resolved_delta(),
-        cfg.channel.noise_std)
+        channels.effective_noise_std(cfg.channel))
 
 
 def evaluate(params, loss_fn, xt, yt, batch: int = 256):

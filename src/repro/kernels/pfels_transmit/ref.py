@@ -35,11 +35,13 @@ def dense_noise_and_mask(idx: jnp.ndarray, noise_key, sigma0: float,
     return mask, z_dense
 
 
-def server_unscale(y_dense: jnp.ndarray, idx: jnp.ndarray, beta, r: int,
+def server_unscale(y_dense: jnp.ndarray, idx: jnp.ndarray, beta, r,
                    d: int, unbiased_rescale: bool = False) -> jnp.ndarray:
     """Receiver-side reconstruction Delta_hat = y_dense/(r beta), with the
     optional beyond-paper d/k unbiasing — the common tail of every
-    aggregation path."""
+    aggregation path. ``r`` is the unscale divisor: the static nominal
+    cohort size, or the traced REALIZED transmitter count under a channel
+    transmit mask (DESIGN.md §11)."""
     delta_hat = y_dense / (r * beta)
     if unbiased_rescale:
         delta_hat = delta_hat * (d / idx.shape[0])

@@ -16,6 +16,7 @@ Usage (CPU-scale example):
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -24,6 +25,7 @@ import jax
 from repro.configs.base import PFELSConfig
 from repro.configs.paper_models import BENCH_MLP, BENCH_CNN_CIFAR
 from repro.core.channel import scaled_channel
+from repro.core.channels import list_channel_models
 from repro.fl import Trainer, list_algorithms
 from repro.data import make_federated_classification, make_population_source
 from repro.models import cnn
@@ -34,6 +36,12 @@ def run_simulation(args):
     key = jax.random.PRNGKey(args.seed)
     params = cnn.init_cnn(key, model_cfg)
     d = sum(p.size for p in jax.tree.leaves(params))
+    # channel scenario (DESIGN.md §11): the regime-scaled fading floor,
+    # specialized to the selected registry model
+    chan = dataclasses.replace(
+        scaled_channel(d), model=args.channel,
+        num_antennas=args.antennas, markov_rho=args.markov_rho,
+        dropout_prob=args.dropout_prob)
     cfg = PFELSConfig(
         num_clients=args.clients, clients_per_round=args.sampled,
         local_steps=args.tau, local_lr=args.lr, clip=args.clip,
@@ -42,7 +50,7 @@ def run_simulation(args):
         algorithm=args.algorithm,
         dp_fedavg_sigma=args.dp_sigma,
         bank_backend=args.bank,
-        channel=scaled_channel(d))
+        channel=chan)
     image_shape = (model_cfg.in_channels, model_cfg.image_size,
                    model_cfg.image_size)
     if args.bank == "streamed" and args.dirichlet_alpha is None:
@@ -78,7 +86,8 @@ def run_simulation(args):
     totals = trainer.ledger_totals(state)
     out = {"config": {"algorithm": cfg.algorithm, "epsilon": cfg.epsilon,
                       "p": cfg.compression_ratio, "rounds": cfg.rounds,
-                      "clients": cfg.num_clients, "d": d},
+                      "clients": cfg.num_clients, "d": d,
+                      "channel": cfg.channel.model},
            "history": history,
            "energy_total": energy_total,
            "privacy": {"per_round_eps_max": totals["eps_max_round"],
@@ -110,6 +119,21 @@ def main():
     ap.add_argument("--momentum", type=float, default=0.9)
     ap.add_argument("--dp-sigma", type=float, default=1.0)
     ap.add_argument("--dirichlet-alpha", type=float, default=None)
+    ap.add_argument("--channel", default="block_fading",
+                    choices=list_channel_models(),
+                    help="wireless scenario from the repro.core.channels "
+                         "registry (DESIGN.md §11): block_fading is the "
+                         "paper's i.i.d. flat fading; markov_fading "
+                         "correlates gains across rounds; mimo_mrc gives "
+                         "the base station --antennas receive antennas; "
+                         "dropout drops each transmission w.p. "
+                         "--dropout-prob")
+    ap.add_argument("--antennas", type=int, default=4,
+                    help="M receive antennas (mimo_mrc)")
+    ap.add_argument("--markov-rho", type=float, default=0.9,
+                    help="round-to-round gain correlation (markov_fading)")
+    ap.add_argument("--dropout-prob", type=float, default=0.1,
+                    help="per-round transmission dropout probability")
     ap.add_argument("--bank", default="resident",
                     choices=["resident", "streamed"],
                     help="ClientBank backend (DESIGN.md §10): 'streamed' "

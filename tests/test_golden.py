@@ -1,0 +1,79 @@
+"""Golden-regression tier (ISSUE 5): fp32 digests of one ``Trainer.run``
+per (algorithm × execution path × channel model) are pinned against
+``tests/goldens/golden_digests.json`` so no PR can silently move the
+numerics of the reproduction. The ``block_fading`` rows were generated
+from the PRE-channel-registry tree and verified exact against the
+refactor — the bit-identity proof of the extraction. Refresh
+intentionally-changed rows with
+``PYTHONPATH=src python tools/update_goldens.py --refresh [--only pat]``.
+"""
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "tools"))
+
+import update_goldens
+
+# fp32-computation drift floor: tight enough that a PRNG-lane shift (O(1)
+# relative change) or an accumulation-order change (~1e-7 relative on
+# these digests) fails, loose enough to absorb vectorization differences
+# across CPU generations on the same pinned jax
+RTOL = 1e-6
+
+_GOLDEN = update_goldens.load_goldens()
+_PROBLEM = None
+
+
+def _problem():
+    global _PROBLEM
+    if _PROBLEM is None:
+        _PROBLEM = update_goldens._problem()
+    return _PROBLEM
+
+
+def _assert_close(path, got, want):
+    if isinstance(want, dict):
+        assert set(got) == set(want), path
+        for k in want:
+            _assert_close(f"{path}.{k}", got[k], want[k])
+    elif isinstance(want, list):
+        assert len(got) == len(want), path
+        for i, (g, w) in enumerate(zip(got, want)):
+            _assert_close(f"{path}[{i}]", g, w)
+    elif isinstance(want, float):
+        assert got == pytest.approx(want, rel=RTOL, abs=1e-12), \
+            f"{path}: golden={want!r} got={got!r}"
+    else:
+        assert got == want, f"{path}: golden={want!r} got={got!r}"
+
+
+@pytest.mark.parametrize("case", sorted(update_goldens._cases()))
+def test_golden_digest(case):
+    golden = _GOLDEN["cases"].get(case)
+    assert golden is not None, (
+        f"no golden for {case}; run tools/update_goldens.py --refresh "
+        f"--only '{case}'")
+    need = golden["needs_devices"]
+    if need > 1 and len(jax.devices()) != need:
+        pytest.skip(f"sharded golden generated on {need} devices "
+                    f"(CI docs job runs the fast tier on 8)")
+    got = update_goldens.run_case(case, _problem())
+    _assert_close(case, got, golden)
+
+
+def test_golden_file_covers_every_case():
+    """A new case added to the harness without a checked-in golden must
+    fail loudly here, not silently skip — and a renamed/deleted case must
+    not leave an orphaned digest that looks pinned but never runs."""
+    missing = sorted(set(update_goldens._cases()) - set(_GOLDEN["cases"]))
+    assert missing == [], (
+        f"run tools/update_goldens.py --refresh --only "
+        f"'{','.join(missing)}'")
+    stale = sorted(set(_GOLDEN["cases"]) - set(update_goldens._cases()))
+    assert stale == [], (
+        f"orphaned golden rows {stale}; tools/update_goldens.py "
+        f"--refresh prunes them")

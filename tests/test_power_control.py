@@ -1,10 +1,12 @@
-"""Theorem 5 power control + Lemma 5 power-limit satisfaction."""
+"""Theorem 5 power control + Lemma 5 power-limit satisfaction, including
+the per-channel-model sweep (every registered wireless scenario must
+respect the per-device energy cap under perfect and imperfect CSI)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import channel, power_control, privacy, randk
+from repro.core import channel, channels, power_control, privacy, randk
 from repro.configs.base import ChannelConfig
 
 
@@ -129,6 +131,72 @@ def test_per_device_energy_statistical_under_imperfect_csi():
             energies[i].append(float(jnp.sum(x_i ** 2)))
     for i in range(r):
         assert np.mean(energies[i]) <= float(p[i]) * 1.05, i
+
+
+# ------------------------------------------- channel-model property sweep
+# parametrized grids instead of hypothesis (not in the pinned environment,
+# same convention as tests/test_privacy.py)
+
+def _model_chan_cfg(model: str, csi: float) -> ChannelConfig:
+    return ChannelConfig(model=model, csi_error=csi, num_antennas=8,
+                         markov_rho=0.9, dropout_prob=0.3)
+
+
+@pytest.mark.parametrize("csi", [0.0, 0.3])
+@pytest.mark.parametrize("model", sorted(channels.list_channel_models()))
+def test_property_energy_cap_holds_for_every_channel_model(model, csi):
+    """For EVERY registered scenario, under perfect and imperfect CSI:
+    each transmitting device's expected energy
+    E_A ||(beta/g_i^obs) A u||^2 = (beta/g_i^obs)^2 (k/d)(eta tau C1)^2
+    stays <= P_i when beta is designed through the registry view
+    (``design_gains``: observed effective gains, dropped clients lifted).
+    A huge epsilon makes the power cap — not the privacy cap — bind."""
+    r, d, k = 6, 512, 128
+    cfg = _model_chan_cfg(model, csi)
+    m = channels.get_channel_model(model)
+    kw = dict(c1=1.0, eta=0.05, tau=5, epsilon=1e9, r=r, n=100,
+              delta=1e-2, sigma0=channels.effective_noise_std(cfg))
+    ete = kw["eta"] * kw["tau"] * kw["c1"]   # Assumption-1 norm bound
+    checked = 0
+    for seed in range(20):
+        kg, kc, kp, ki = jax.random.split(jax.random.PRNGKey(seed), 4)
+        carry = m.init(ki, r, cfg)
+        _, cr = m.step(carry, cfg, r, jnp.arange(r), kg, kc)
+        p = channel.sample_power_limits(kp, r, d, cfg)
+        beta = power_control.beta_pfels(
+            channels.design_gains(cr), p, d=d, k=k, **kw)
+        obs = channels.observed_gains(cr)
+        energy = (beta / obs) ** 2 * (k / d) * ete ** 2
+        tx = (np.ones(r) if cr.tx_mask is None else np.asarray(cr.tx_mask))
+        ok = np.asarray(energy <= p * (1 + 1e-5)) | (tx == 0.0)
+        assert bool(np.all(ok)), (model, csi, seed)
+        checked += int(tx.sum())
+    assert checked > 0
+
+
+@pytest.mark.parametrize("model", sorted(channels.list_channel_models()))
+def test_property_realized_energy_zero_for_dropped(model):
+    """What a masked client actually radiates is zero — the aggregate
+    transmit-energy metric only charges realized transmitters."""
+    r, d, k = 6, 256, 64
+    cfg = _model_chan_cfg(model, 0.0)
+    m = channels.get_channel_model(model)
+    kg, kc, ki, ku = jax.random.split(jax.random.PRNGKey(1), 4)
+    _, cr = m.step(m.init(ki, r, cfg), cfg, r, jnp.arange(r), kg, kc)
+    u = jax.random.normal(ku, (r, d))
+    from repro.core import aggregation
+    idx = randk.sample_indices(kg, d, k)
+    _, energy_all, _ = aggregation.aircomp_aggregate(
+        u, idx, cr.gains, 1.0, ku, d=d,
+        sigma0=channels.effective_noise_std(cfg), r=r)
+    _, energy_masked, _ = aggregation.aircomp_aggregate(
+        u, idx, cr.gains, 1.0, ku, d=d,
+        sigma0=channels.effective_noise_std(cfg), r=r,
+        tx_mask=cr.tx_mask)
+    if cr.tx_mask is None or bool(jnp.all(cr.tx_mask == 1.0)):
+        assert float(energy_masked) == float(energy_all)
+    else:
+        assert float(energy_masked) < float(energy_all)
 
 
 def test_wfl_pdp_caps_wfl_p():

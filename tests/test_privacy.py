@@ -163,3 +163,65 @@ def test_property_zcdp_finite_positive(z, rounds):
     assert delta == 1e-5
     bad, _ = privacy.compose_zcdp(0.0, rounds, 1e-5)
     assert bad == float("inf")
+
+
+# ----------------------------- ledger parity across the scenario registry
+
+@pytest.fixture(scope="module")
+def _ledger_problem():
+    from repro.configs.paper_models import BENCH_MLP
+    from repro.data import make_federated_classification
+    from repro.models import cnn
+
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_cnn(key, BENCH_MLP)
+    x, y, _, _ = make_federated_classification(
+        key, n_clients=20, per_client=20, num_classes=10,
+        image_shape=(1, 8, 8))
+    loss_fn = lambda p, b: cnn.cnn_loss(p, BENCH_MLP, b)
+    return params, (x, y), loss_fn
+
+
+@pytest.mark.parametrize("backend", ["resident", "streamed"])
+def test_property_ledger_matches_host_for_every_channel_model(
+        _ledger_problem, backend):
+    """For EVERY registered channel model and BOTH bank backends, the
+    in-graph ledger equals a host-side PrivacyLedger recomputation from
+    the realized per-round betas (``round_epsilon_spent`` uses the
+    model's post-combining noise, so the recomputation is the true
+    oracle for mimo_mrc too)."""
+    from repro.configs import ChannelConfig, PFELSConfig
+    from repro.core import channels
+    from repro.fl import Trainer, round_epsilon_spent
+    from repro.fl.api import replace
+
+    params, (x, y), loss_fn = _ledger_problem
+    for model in channels.list_channel_models():
+        cfg = PFELSConfig(
+            num_clients=20, clients_per_round=4, local_steps=2,
+            local_lr=0.05, compression_ratio=0.3, epsilon=2.0, rounds=2,
+            bank_backend=backend,
+            channel=ChannelConfig(model=model, num_antennas=8,
+                                  markov_rho=0.9, dropout_prob=0.3))
+        trainer = Trainer(cfg, loss_fn, params)
+        state = replace(trainer.init(jax.random.PRNGKey(1)),
+                        key=jax.random.PRNGKey(2))
+        xs = np.asarray(x) if backend == "streamed" else x
+        ys = np.asarray(y) if backend == "streamed" else y
+        t = 3
+        end, metrics = trainer.run(state, xs, ys, rounds=t)
+        host = privacy.PrivacyLedger(n=cfg.num_clients,
+                                     delta=cfg.resolved_delta())
+        for beta in np.asarray(metrics["beta"]):
+            host.spend(min(round_epsilon_spent(cfg, float(beta)),
+                           cfg.epsilon))
+        totals = trainer.ledger_totals(end)
+        np.testing.assert_allclose(totals["basic"], host.total_basic(),
+                                   rtol=1e-5, err_msg=model)
+        np.testing.assert_allclose(totals["advanced"],
+                                   host.total_advanced(), rtol=1e-5,
+                                   err_msg=model)
+        assert totals["spends"] == t, model
+        np.testing.assert_allclose(np.asarray(metrics["eps_round"]),
+                                   host.eps_rounds, rtol=1e-6,
+                                   err_msg=model)

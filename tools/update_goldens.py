@@ -1,0 +1,231 @@
+#!/usr/bin/env python
+"""Golden-regression harness: pin fp32 digests of one ``Trainer.run``.
+
+``tests/test_golden.py`` recomputes every case in ``CASES`` and compares
+against the checked-in ``tests/goldens/golden_digests.json``; this tool
+(re)generates or verifies that file:
+
+    PYTHONPATH=src python tools/update_goldens.py --refresh
+    PYTHONPATH=src python tools/update_goldens.py --refresh --only 'chan_*'
+    PYTHONPATH=src python tools/update_goldens.py --check      # exact (==)
+
+Why a golden tier exists (ISSUE 5): the channel-registry refactor — and
+every future PR — must not *silently* move the numerics of the paper
+reproduction. Each case runs two ``Trainer.run`` rounds of the shared
+BENCH_MLP problem for one (algorithm × execution-path × channel-model)
+point and digests the results (params sums, per-round metrics, ledger
+accumulators) in float64 over the fp32 outputs, so accumulation-order
+changes and PRNG-lane shifts both surface. The ``block_fading`` rows were
+generated from the PRE-refactor code (PR 4 tree) and verified exact
+(``--check``) against the refactored registry — the bit-identity proof of
+the ``block_fading`` extraction.
+
+Sharded-cohort cases record the device count they were generated under
+(the generator forces an 8-device host platform, like
+``benchmarks/kernel_bench.py``); the test skips them when the ambient
+device count differs (the CI docs job runs the fast tier on 8 devices, so
+they execute on every PR).
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import sys
+
+if __name__ == "__main__":
+    # generation always happens on the 8-device host platform so the
+    # sharded cases shard for real; must win the race with jax import
+    if "--xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8")
+    sys.path.insert(0, os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+GOLDEN_PATH = os.path.join(ROOT, "tests", "goldens", "golden_digests.json")
+
+# the shared fast-tier FL problem (mirrors tests/test_trainer_api.py BASE)
+BASE = dict(num_clients=20, clients_per_round=4, local_steps=2,
+            local_lr=0.05, compression_ratio=0.3, epsilon=2.0, rounds=2)
+ROUNDS = 2
+# the metric keys digested per round (the uniform Trainer metric contract)
+METRIC_KEYS = ("train_loss", "update_norm", "beta", "energy",
+               "subcarriers", "eps_round")
+
+_AIRCOMP = ("pfels", "wfl_p", "wfl_pdp")
+_ALL = ("pfels", "wfl_p", "wfl_pdp", "dp_fedavg", "fedavg")
+
+
+def _cases():
+    """case name -> (cfg_overrides, channel_overrides, needs_devices).
+
+    algorithm × execution path, plus the channel-model rows (``chan_*``)
+    and an error-feedback row. ``needs_devices`` > 1 marks cases whose
+    digests depend on the device count (sharded cohort psum)."""
+    cases = {}
+    for alg in _ALL:
+        cases[f"{alg}-unfused"] = (dict(algorithm=alg), {}, 1)
+        cases[f"{alg}-streamed"] = (
+            dict(algorithm=alg, bank_backend="streamed"), {}, 1)
+        cases[f"{alg}-sharded"] = (
+            dict(algorithm=alg, client_sharding="cohort"), {}, 8)
+    for alg in _AIRCOMP:
+        # the fused Pallas path only routes aircomp aggregation
+        cases[f"{alg}-fused"] = (
+            dict(algorithm=alg, use_fused_kernel=True), {}, 1)
+    cases["pfels-error_feedback"] = (
+        dict(error_feedback=True, transmit_clip=0.5), {}, 1)
+    # channel-registry scenarios (pfels; block_fading is every row above)
+    for backend in ("resident", "streamed"):
+        tag = "" if backend == "resident" else "-streamed"
+        cases[f"chan_markov{tag}"] = (
+            dict(bank_backend=backend),
+            dict(model="markov_fading", markov_rho=0.9), 1)
+        cases[f"chan_mimo_mrc{tag}"] = (
+            dict(bank_backend=backend),
+            dict(model="mimo_mrc", num_antennas=8), 1)
+        cases[f"chan_dropout{tag}"] = (
+            dict(bank_backend=backend),
+            dict(model="dropout", dropout_prob=0.4), 1)
+    return cases
+
+
+def _problem():
+    from jax.flatten_util import ravel_pytree
+
+    from repro.configs.paper_models import BENCH_MLP
+    from repro.data import make_federated_classification
+    from repro.models import cnn
+
+    key = jax.random.PRNGKey(0)
+    params = cnn.init_cnn(key, BENCH_MLP)
+    x, y, _, _ = make_federated_classification(
+        key, n_clients=BASE["num_clients"], per_client=20, num_classes=10,
+        image_shape=(1, 8, 8))
+    loss_fn = lambda p, b: cnn.cnn_loss(p, BENCH_MLP, b)
+    return params, x, y, loss_fn, ravel_pytree
+
+
+def _digest_arr(a) -> list:
+    """Order-stable float64 reductions of an fp32 array — fine-grained
+    enough that lane shifts AND accumulation-order changes surface."""
+    a = np.asarray(a, dtype=np.float64)
+    return [float(a.sum()), float(np.abs(a).sum()), float((a * a).sum())]
+
+
+def run_case(name, problem):
+    """One Trainer.run over the shared problem -> JSON-able digest."""
+    import dataclasses
+
+    from repro.configs import ChannelConfig, PFELSConfig
+    from repro.fl import Trainer
+    from repro.fl.api import replace
+
+    params, x, y, loss_fn, ravel_pytree = _problem() if problem is None \
+        else problem
+    cfg_kw, chan_kw, needs_devices = _cases()[name]
+    cfg = PFELSConfig(**BASE, **cfg_kw)
+    if chan_kw:
+        cfg = dataclasses.replace(cfg, channel=ChannelConfig(**chan_kw))
+    trainer = Trainer(cfg, loss_fn, params)
+    state = replace(trainer.init(jax.random.PRNGKey(1)),
+                    key=jax.random.PRNGKey(2))
+    if cfg.bank_backend == "streamed":
+        x, y = np.asarray(x), np.asarray(y)
+    end, metrics = trainer.run(state, x, y, rounds=ROUNDS)
+    flat = ravel_pytree(end.params)[0]
+    return {
+        "needs_devices": needs_devices,
+        "params": _digest_arr(flat),
+        "prev_delta": _digest_arr(end.prev_delta),
+        "metrics": {k: [float(v) for v in np.asarray(metrics[k],
+                                                     np.float64)]
+                    for k in METRIC_KEYS},
+        "ledger": {"eps_sum": float(end.ledger.eps_sum),
+                   "eps_max": float(end.ledger.eps_max),
+                   "spends": int(end.ledger.spends)},
+    }
+
+
+def load_goldens() -> dict:
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--refresh", action="store_true",
+                    help="regenerate digests and write the golden file")
+    ap.add_argument("--check", action="store_true",
+                    help="recompute and compare EXACTLY (bit-identity "
+                         "verification on the generating machine)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated fnmatch pattern(s) restricting "
+                         "--refresh/--check to matching case names (other "
+                         "rows are kept)")
+    args = ap.parse_args(argv)
+    if args.refresh == args.check:
+        ap.error("pass exactly one of --refresh / --check")
+
+    names = sorted(_cases())
+    if args.only:
+        pats = args.only.split(",")
+        names = [n for n in names
+                 if any(fnmatch.fnmatch(n, p) for p in pats)]
+    problem = _problem()
+
+    if args.refresh:
+        doc = {"meta": {"jax": jax.__version__, "rounds": ROUNDS,
+                        "base": BASE, "device_count": len(jax.devices())},
+               "cases": {}}
+        if os.path.exists(GOLDEN_PATH):
+            doc["cases"] = load_goldens()["cases"]
+        # prune rows whose case no longer exists (renames/deletions must
+        # not leave orphaned digests that look pinned but never run)
+        for stale in sorted(set(doc["cases"]) - set(_cases())):
+            print(f"pruned stale golden {stale}")
+            del doc["cases"][stale]
+        for name in names:
+            doc["cases"][name] = run_case(name, problem)
+            print(f"refreshed {name}", flush=True)
+        os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+        with open(GOLDEN_PATH, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        print(f"wrote {len(names)} cases -> {GOLDEN_PATH}")
+        return 0
+
+    golden = load_goldens()["cases"]
+    bad = 0
+    for name in names:
+        if name not in golden:
+            print(f"MISSING golden for {name}")
+            bad += 1
+            continue
+        if golden[name]["needs_devices"] != len(jax.devices()) \
+                and golden[name]["needs_devices"] > 1:
+            print(f"skip {name} (needs {golden[name]['needs_devices']} "
+                  f"devices)")
+            continue
+        got = run_case(name, problem)
+        if got != golden[name]:
+            print(f"DRIFT in {name}:")
+            for k in golden[name]:
+                if got[k] != golden[name][k]:
+                    print(f"  {k}: golden={golden[name][k]} got={got[k]}")
+            bad += 1
+        else:
+            print(f"exact {name}", flush=True)
+    print(f"{bad} case(s) drifted" if bad else "all cases exact")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
