@@ -4,9 +4,15 @@ Wall-times on CPU are NOT the perf claim (interpret mode runs the kernel
 body in Python); this benchmark validates the call path and records the
 oracle cost — the TPU perf story lives in the roofline analysis.
 
+``--emit BENCH_6.json`` writes the schema-versioned perf trajectory
+(DESIGN.md §12): every row carries its us/call plus — for the PINNED
+fused fast-path rows — the us/call of its unfused-oracle counterpart,
+so ``tools/check_bench.py`` can gate on fused/oracle RATIOS (machine
+speed cancels between the committed trajectory and a fresh CI run).
+
 Forces an 8-device host platform (before jax initializes) so the sharded
 cohort round (round_sharded vs round_vmapped rows) actually splits over
-devices on CPU.
+devices on CPU. ``benchmarks/run.sh`` is the tuned launcher.
 """
 from __future__ import annotations
 
@@ -17,6 +23,9 @@ if "--xla_force_host_platform_device_count" not in os.environ.get(
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_force_host_platform_device_count=8")
 
+import argparse
+import fnmatch
+import json
 import time
 
 import jax
@@ -29,13 +38,28 @@ from repro.kernels.pfels_transmit.ops import fused_transmit
 from repro.kernels.randk_gather.ops import gather_rows
 from repro.kernels.ssd_scan.ops import ssd_scan
 
+# bump when the emitted JSON layout changes; tools/check_bench.py refuses
+# to compare trajectories across schema versions
+SCHEMA_VERSION = 1
 
-def _time(f, *args, reps=5):
-    f(*args)  # compile
-    t0 = time.time()
+# untimed calls burned before the clock starts (the first triggers
+# compilation; extras settle allocator/cache state) — ``--warmup`` flag
+DEFAULT_WARMUP = 1
+
+
+def _time(f, *args, reps=5, warmup=None):
+    """us/call of ``f(*args)``: ``warmup`` untimed calls (floored at 1 so
+    compilation never lands in the timed region), then ``reps`` timed
+    calls on the monotonic high-resolution ``time.perf_counter`` clock
+    (``time.time`` is wall-clock: coarse on some platforms and steppable
+    by NTP mid-measurement)."""
+    w = DEFAULT_WARMUP if warmup is None else warmup
+    for _ in range(max(1, w)):
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(f(*args))
-    return (time.time() - t0) / reps * 1e6
+    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def bench_pfels_transmit(key, rows, *, r=16, d=128 * 512):
@@ -231,10 +255,74 @@ def bench_sharded_round(rows):
                  f"r={cfg.clients_per_round},d={d},shards={shards}"))
 
 
-def run():
-    key = jax.random.PRNGKey(0)
-    rows = []
+# the PR-6 fast-path matrix: every registered channel scenario ×
+# execution path gets a fused row and its unfused-oracle twin
+_SCENARIOS = (
+    ("block_fading", {}),
+    ("markov", dict(model="markov_fading", markov_rho=0.9)),
+    ("mimo_mrc", dict(model="mimo_mrc", num_antennas=4)),
+    ("dropout", dict(model="dropout", dropout_prob=0.4)),
+)
 
+# pinned fast-path row -> its unfused-oracle row. Pinned rows are the
+# regression surface of the committed trajectory: tools/check_bench.py
+# fails if a fresh run's (pinned us)/(oracle us) ratio regresses beyond
+# tolerance vs the committed one, or if a pinned row disappears.
+PINNED = {
+    "pfels_transmit_fused_pallas": "pfels_transmit_unfused",
+    **{f"scenario_{tag}_{path}_fused": f"scenario_{tag}_{path}_unfused"
+       for tag, _ in _SCENARIOS for path in ("vmapped", "sharded")},
+}
+
+# per-row gate tolerance stamped into the emitted trajectory (overrides
+# check_bench's global --tolerance): whole-round Trainer.step timings on a
+# shared CI runner jitter far more than isolated kernels, and the
+# interpret-mode Pallas row runs its tile loop in Python — both want a
+# looser leash. A genuine 2x slowdown (ratio +100%) still fails every row.
+ROW_TOLERANCE = {
+    "scenario_*": 0.75,
+    "pfels_transmit_fused_pallas": 0.5,
+}
+
+
+def bench_scenarios(rows):
+    """One Trainer.step round per channel model × execution path
+    (vmapped / sharded-psum) × {fused default, unfused oracle} — the
+    fast-path matrix ISSUE 6 makes the default. The fused rows are the
+    pinned perf surface of BENCH_6.json."""
+    import dataclasses
+
+    from repro.configs import ChannelConfig, PFELSConfig
+    from repro.fl import Trainer
+    from repro.fl.api import replace
+    from repro.launch.mesh import make_cohort_mesh
+
+    cfg0 = PFELSConfig(num_clients=30, clients_per_round=8, local_steps=2)
+    params, d, _, (x, y), loss_fn, _ = _fl_problem(cfg0)
+    mesh = make_cohort_mesh(cfg0.clients_per_round)
+
+    for tag, chan_kw in _SCENARIOS:
+        chan = ChannelConfig(**chan_kw)
+        for path in ("vmapped", "sharded"):
+            for fused in (True, False):
+                cfg = dataclasses.replace(
+                    cfg0, channel=chan, use_fused_kernel=fused,
+                    client_sharding="cohort" if path == "sharded"
+                    else "none")
+                trainer = Trainer(cfg, loss_fn, params,
+                                  mesh=mesh if path == "sharded" else None)
+                state = replace(trainer.init(jax.random.PRNGKey(1)),
+                                key=jax.random.PRNGKey(2))
+                us = _time(lambda: trainer.step(state, x, y)[0].prev_delta,
+                           reps=2)
+                mode = "fused" if fused else "unfused"
+                rows.append((f"scenario_{tag}_{path}_{mode}", us,
+                             f"r={cfg0.clients_per_round},d={d},"
+                             f"chan={chan.model}"))
+
+
+def bench_micro(key, rows):
+    """Single-op Pallas-vs-ref rows (gather, clip, scan, attention)."""
     d = 128 * 2048
     delta = jax.random.normal(key, (d,))
     idx = jax.random.permutation(key, d // 128)[: d // 128 // 4]
@@ -267,16 +355,86 @@ def run():
                    reps=2)
         rows.append((f"flash_attn_{tag}", us, "b1s512h8kv2d64"))
 
-    bench_pfels_transmit(key, rows)
-    bench_round_drivers(rows)
-    bench_bank_backends(rows)
-    bench_channel_models(rows)
-    bench_sharded_round(rows)
+
+def emit(rows, path):
+    """Write the schema-versioned trajectory JSON. Every pinned row must
+    have its oracle row in the same run (the gate compares ratios) —
+    emitting a partial ``--only`` run that splits a pinned/oracle pair is
+    an error, not a silently-gapped trajectory."""
+    by_name = {name: us for name, us, _ in rows}
+    out = []
+    for name, us, cfgstr in rows:
+        oracle = PINNED.get(name)
+        if oracle is not None and oracle not in by_name:
+            raise ValueError(
+                f"pinned row {name!r} emitted without its oracle row "
+                f"{oracle!r}; widen --only or drop --emit")
+        row = {"op": name, "config": cfgstr,
+               "us_per_call": round(us, 2),
+               "oracle_us_per_call": (round(by_name[oracle], 2)
+                                      if oracle else None),
+               "pinned": name in PINNED}
+        if name in PINNED:
+            for pat, tol in ROW_TOLERANCE.items():
+                if fnmatch.fnmatch(name, pat):
+                    row["tolerance"] = tol
+                    break
+        out.append(row)
+    doc = {"schema_version": SCHEMA_VERSION,
+           "meta": {"jax": jax.__version__,
+                    "device_count": len(jax.devices()),
+                    "platform": jax.devices()[0].platform},
+           "rows": out}
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(out)} rows -> {path}", flush=True)
+
+
+def run(only=None):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    groups = (
+        ("micro", lambda: bench_micro(key, rows)),
+        ("pfels_transmit", lambda: bench_pfels_transmit(key, rows)),
+        ("rounds", lambda: bench_round_drivers(rows)),
+        ("bank", lambda: bench_bank_backends(rows)),
+        ("channels", lambda: bench_channel_models(rows)),
+        ("sharded", lambda: bench_sharded_round(rows)),
+        ("scenarios", lambda: bench_scenarios(rows)),
+    )
+    for name, fn in groups:
+        if only and not any(fnmatch.fnmatch(name, p) for p in only):
+            continue
+        fn()
 
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}", flush=True)
     return rows
 
 
+def main(argv=None):
+    global DEFAULT_WARMUP
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--emit", default=None, metavar="PATH",
+                    help="also write the schema-versioned trajectory JSON "
+                         "(e.g. benchmarks/BENCH_6.json)")
+    ap.add_argument("--warmup", type=int, default=None,
+                    help=f"untimed warmup calls per row (default "
+                         f"{DEFAULT_WARMUP}; floored at 1 so compile "
+                         f"never pollutes the timed region)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated fnmatch pattern(s) of bench "
+                         "groups to run (micro, pfels_transmit, rounds, "
+                         "bank, channels, sharded, scenarios)")
+    args = ap.parse_args(argv)
+    if args.warmup is not None:
+        DEFAULT_WARMUP = args.warmup
+    rows = run(only=args.only.split(",") if args.only else None)
+    if args.emit:
+        emit(rows, args.emit)
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    main()

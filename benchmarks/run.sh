@@ -1,0 +1,46 @@
+#!/usr/bin/env bash
+# Tuned launcher for the kernel benchmark (DESIGN.md §12).
+#
+# Pins the runtime knobs that otherwise make bench numbers incomparable
+# run-to-run, then forwards every argument to kernel_bench:
+#
+#   benchmarks/run.sh                                   # print CSV rows
+#   benchmarks/run.sh --emit benchmarks/BENCH_6.json    # + trajectory JSON
+#   benchmarks/run.sh --only scenarios --warmup 3
+#
+# Knobs (idioms documented in SNIPPETS.md):
+#  - tcmalloc preload (when present): glibc malloc contention skews the
+#    host-loop rows; skipped silently if the lib is not installed.
+#  - --xla_force_host_platform_device_count=8: the sharded rows must
+#    split over 8 host devices, set before jax initializes.
+#  - --xla_cpu_enable_fast_math=false: keep timed numerics identical to
+#    the test numerics (no fast-math-only speedups in the trajectory).
+#  - step-marker at entry so per-step boundaries survive into profiles.
+#  - JAX_DEFAULT_DTYPE_BITS=32 + no-x64: the fp32 dtype policy the repro
+#    trains under; benching fp64 paths would gate the wrong kernels.
+#  - TF_CPP_MIN_LOG_LEVEL=4: log spam perturbs timings via stderr I/O.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+for lib in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+           /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+  if [[ -z "${LD_PRELOAD:-}" && -e "$lib" ]]; then
+    export LD_PRELOAD="$lib"
+    break
+  fi
+done
+
+export TF_CPP_MIN_LOG_LEVEL=4
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+export JAX_ENABLE_X64=0
+export JAX_DEFAULT_DTYPE_BITS=32
+# step marker at the outer while loop = the round scan (entry would mark
+# whole-program dispatch instead)
+export XLA_FLAGS="${XLA_FLAGS:-} \
+  --xla_force_host_platform_device_count=8 \
+  --xla_cpu_enable_fast_math=false \
+  --xla_step_marker_location=STEP_MARK_AT_TOP_LEVEL_WHILE_LOOP"
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+exec python benchmarks/kernel_bench.py "$@"

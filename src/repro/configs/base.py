@@ -254,11 +254,16 @@ class PFELSConfig:
     # the shared-subcarrier alignment AirComp requires)
     randk_mode: str = "exact"
     grad_accum: int = 1               # microbatches per step (memory knob)
-    # fused transmit pipeline: route PFELS aggregation through the
-    # kernels/pfels_transmit Pallas path (clip -> rand_k -> power scale ->
-    # noisy AirComp sum in one pass over d-tiles, no (r, d) intermediates).
-    # False keeps the unfused pure-JAX reference path (seed behavior).
-    use_fused_kernel: bool = False
+    # fused transmit pipeline — THE DEFAULT execution mode (DESIGN.md
+    # §12): route AirComp aggregation through the kernels/pfels_transmit
+    # Pallas path (clip -> rand_k -> power scale -> transmit mask ->
+    # MRC combine -> noisy AirComp sum in one pass over d-tiles, no
+    # (r, d) intermediates), for EVERY registered channel model and both
+    # execution paths (vmapped and sharded-psum). use_fused_kernel=False
+    # is the explicit escape hatch back to the unfused pure-JAX oracle
+    # (the pre-PR-6 default; fp32-parity enforced by
+    # tests/test_pfels_transmit.py and the golden tier).
+    use_fused_kernel: bool = True
     # optional transmit-side per-client l2 cap C: each Delta_i is scaled by
     # min(1, C/||Delta_i||) before sparsification, enforcing the Theorem-5
     # premise ||Delta|| <= eta tau C1. None disables.

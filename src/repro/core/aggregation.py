@@ -79,7 +79,7 @@ def aircomp_aggregate_fused(updates_flat, idx, gains, beta, noise_key, *,
                             gains_est=None, clip: Optional[float] = None,
                             use_kernel: bool = True,
                             interpret: Optional[bool] = None,
-                            tx_mask=None):
+                            tx_mask=None, gains_ant=None):
     """Fused-pipeline variant of :func:`aircomp_aggregate` — identical
     contract and PRNG-noise draw, executed by the ``pfels_transmit`` Pallas
     kernel in one pass over tiles of d with no (r, d) sparsified/scaled
@@ -87,19 +87,20 @@ def aircomp_aggregate_fused(updates_flat, idx, gains, beta, noise_key, *,
     (ref.py) instead, for parity testing; ``interpret=None`` compiles the
     kernel on TPU and interprets elsewhere.
 
-    ``tx_mask`` composes with the kernel WITHOUT touching it: masking
-    commutes with the fused pipeline (a zeroed client row clips to scale 1,
-    contributes zero to the MAC sum and zero energy), so the mask is
-    applied to the update rows up front and the realized transmitter count
-    goes in as the unscale divisor — the exact division the unfused
-    reference performs."""
+    The scenario matrix is fused IN-TILE (DESIGN.md §12): ``tx_mask``
+    rides into the kernel as a per-client coefficient column (a dropped
+    client contributes zero signal and zero energy without an (r, d)
+    pre-masked intermediate — the pre-PR-6 formulation — and the unscale
+    divisor is the realized transmitter count, floored at 1);
+    ``gains_ant`` (r, M) routes the per-antenna magnitudes to the
+    kernel's in-tile MRC combine (``gains`` stays the effective view the
+    β design and the unfused oracle consume — ``sum_m h_{i,m}``)."""
     from repro.kernels.pfels_transmit.ops import fused_transmit
-    if tx_mask is not None:
-        updates_flat = updates_flat * tx_mask[:, None]
     return fused_transmit(
-        updates_flat, idx, gains, beta, noise_key, d=d,
-        sigma0=sigma0, r=realized_r(tx_mask, r), clip=clip,
-        gains_est=gains_est, unbiased_rescale=unbiased_rescale,
+        updates_flat, idx, gains_ant if gains_ant is not None else gains,
+        beta, noise_key, d=d, sigma0=sigma0, r=r, clip=clip,
+        gains_est=gains_est, tx_mask=tx_mask,
+        unbiased_rescale=unbiased_rescale,
         use_kernel=use_kernel, interpret=interpret)
 
 
@@ -128,30 +129,34 @@ def aircomp_aggregate_sharded(updates_local, idx, gains_local, beta,
 
     ``beta`` must be the Theorem-5 coefficient computed from the GLOBAL
     gains (it is a min over all r clients — compute it before entering the
-    manual region, or from an all-gather). ``tx_mask_local`` is this
+    manual region, or from an all-gather). ``gains_local`` may be the
+    (r_local,) effective gains or the (r_local, M) per-antenna matrix
+    (mimo_mrc) — the kernel MRC-combines in-tile, the reference through
+    ``ref.effective_gains`` (DESIGN.md §12). ``tx_mask_local`` is this
     shard's slice of the channel model's transmit mask (DESIGN.md §11):
-    masked rows contribute nothing to the partial MAC sum or energy, and
-    the realized transmitter count — the unscale divisor — is itself a
-    ``psum`` over the shards. Returns (delta_hat (d,), energy, y (k,)),
-    all replicated over ``axis_name``.
+    masked rows contribute nothing to the partial MAC sum or energy
+    (folded into the per-client coefficients, never an (r, d) pre-masked
+    intermediate), and the realized transmitter count — the unscale
+    divisor — is itself a ``psum`` over the shards. Returns
+    (delta_hat (d,), energy, y (k,)), all replicated over ``axis_name``.
     """
     mask, z_dense = transmit_ref.dense_noise_and_mask(idx, noise_key,
                                                       sigma0, d)
     zeros = jnp.zeros((d,), jnp.float32)
     u = updates_local.astype(jnp.float32)
-    if tx_mask_local is not None:
-        u = u * tx_mask_local[:, None]
     if use_kernel:
         from repro.kernels.pfels_transmit.ops import fused_pipeline
         y_part, e_part = fused_pipeline(
             u, mask, zeros, gains_local, beta, clip=clip,
-            gains_est=gains_est_local, interpret=interpret)
+            gains_est=gains_est_local, tx_mask=tx_mask_local,
+            interpret=interpret)
     else:
         scales = transmit_ref.clip_scales(u, clip)
         tx, rx = transmit_ref.transmit_coeffs(gains_local, beta, scales,
                                               gains_est_local)
-        y_part, e_part = transmit_ref.pfels_transmit_ref(u, mask, zeros, rx,
-                                                         tx ** 2)
+        rx_eff, tx_sq = transmit_ref.masked_coeffs(tx, rx, tx_mask_local)
+        y_part, e_part = transmit_ref.pfels_transmit_ref(u, mask, zeros,
+                                                         rx_eff, tx_sq)
     y_dense = jax.lax.psum(y_part, axis_name) + z_dense
     energy = jax.lax.psum(e_part, axis_name)
     r_div = r

@@ -46,11 +46,17 @@ class ChannelRound(NamedTuple):
     perfect CSI: observed == true, and the aggregation paths skip the
     estimate division entirely — the seed-exact fast path). ``tx_mask``:
     (r,) 0/1 float transmit indicator, or ``None`` when every sampled
-    client transmits (again the seed-exact fast path).
+    client transmits (again the seed-exact fast path). ``gains_ant``:
+    optional (r, M) per-antenna true magnitudes (mimo_mrc) — when set,
+    the fused kernel consumes the matrix and performs the all-ones-beam
+    MRC combine IN-TILE (DESIGN.md §12); ``gains`` must then equal
+    ``sum_m gains_ant[:, m]`` (the effective view the β design and the
+    unfused oracle keep using).
     """
     gains: jnp.ndarray
     gains_obs: Optional[jnp.ndarray] = None
     tx_mask: Optional[jnp.ndarray] = None
+    gains_ant: Optional[jnp.ndarray] = None
 
 
 @dataclass(frozen=True)

@@ -54,10 +54,16 @@ def _init(key, n: int, cfg: ChannelConfig):
 
 
 def _step(carry, cfg: ChannelConfig, r: int, sel, gains_key, csi_key):
-    gains = combine_mrc(antenna_gains(gains_key, r, cfg))
+    per_ant = antenna_gains(gains_key, r, cfg)
+    gains = combine_mrc(per_ant)
     obs = (channel.estimate_gains(csi_key, gains, cfg)
            if cfg.csi_error > 0 else None)
-    return carry, ChannelRound(gains=gains, gains_obs=obs)
+    # gains_ant hands the raw (r, M) matrix to the fused kernel, whose
+    # in-tile all-ones-beam combine recomputes exactly combine_mrc
+    # (DESIGN.md §12); gains stays the effective view for β design, the
+    # CSI estimate, and the unfused oracle
+    return carry, ChannelRound(gains=gains, gains_obs=obs,
+                               gains_ant=per_ant)
 
 
 MODEL = register_channel_model("mimo_mrc", ChannelModel(

@@ -202,6 +202,8 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
 
         def cohort_body(params, cx_l, cy_l, ck_l, res_l, gains_l, gest_l,
                         mask_l, idx, beta, noise_key):
+            # gains_l is this shard's (r_local, M) per-antenna slice (M=1
+            # for scalar channels — bit-exact identity, DESIGN.md §12)
             # inside the manual region: sharding constraints must not
             # re-reference the cohort axes
             with rules.exclude_axes(*_COHORT_AXES):
@@ -285,9 +287,11 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         if cohort_apply is not None:
             res_l = (res_sel if use_ef
                      else jnp.zeros((r, d), jnp.float32))
+            gains_mat = (cr.gains_ant if cr.gains_ant is not None
+                         else gains[:, None])
             flat_updates, losses, scales_sh, delta_sh, energy_sh = \
                 cohort_apply(
-                    params, cx, cy, ck, res_l, gains, gains_obs,
+                    params, cx, cy, ck, res_l, gains_mat, gains_obs,
                     (tx_mask if tx_mask is not None
                      else jnp.ones((r,), jnp.float32)),
                     idx if idx is not None else jnp.arange(1),
@@ -316,9 +320,6 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
             if agg_sharded is not None:
                 delta_hat, energy = agg_sharded
             else:
-                aggregate = (aggregation.aircomp_aggregate_fused
-                             if cfg.use_fused_kernel
-                             else aggregation.aircomp_aggregate)
                 # error feedback needs the clip scales for the residual
                 # anyway, so compute them ONCE here and hand the aggregator
                 # pre-clipped updates (clip=None) instead of paying a second
@@ -330,13 +331,23 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                         flat_updates, cfg.transmit_clip)
                     agg_updates = flat_updates * transmit_scales[:, None]
                     agg_clip = None
-                delta_hat, energy, _ = aggregate(
-                    agg_updates, idx, gains, beta, ks[4], d=d,
-                    sigma0=sigma0, r=r,
+                agg_kw = dict(
+                    d=d, sigma0=sigma0, r=r,
                     unbiased_rescale=cfg.unbiased_rescale,
                     gains_est=(cr.gains_obs if cfg.channel.csi_error > 0
                                else None),
                     clip=agg_clip, tx_mask=tx_mask)
+                if cfg.use_fused_kernel:
+                    # the whole scenario matrix rides the kernel in-tile:
+                    # tx_mask as a coefficient column, per-antenna gains
+                    # through the MRC combine (DESIGN.md §12)
+                    delta_hat, energy, _ = \
+                        aggregation.aircomp_aggregate_fused(
+                            agg_updates, idx, gains, beta, ks[4],
+                            gains_ant=cr.gains_ant, **agg_kw)
+                else:
+                    delta_hat, energy, _ = aggregation.aircomp_aggregate(
+                        agg_updates, idx, gains, beta, ks[4], **agg_kw)
             metrics.update(beta=beta, energy=energy,
                            subcarriers=jnp.asarray(k_used))
         else:   # digital server-side aggregation (registry hook)

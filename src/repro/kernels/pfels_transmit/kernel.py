@@ -13,6 +13,17 @@ pre-scattered channel noise, and accumulates the transmit energy
 sum_i tx_i^2 ||m * Delta_i||^2 into a (1, 1) output across the sequential
 TPU grid (the same cross-step reduction idiom as clip_norm).
 
+The whole wireless-scenario matrix runs in-tile (DESIGN.md §12):
+
+  - per-client transmit mask (the ``dropout`` scenario): a (r, 1) 0/1
+    ``txm`` column zeroes a masked client's MAC contribution AND its
+    energy term inside the tile pass — no (r, d) pre-masked intermediate;
+  - per-antenna MRC combining (the ``mimo_mrc`` scenario): the gains
+    arrive as an (r, M) per-antenna matrix and the all-ones-beam combine
+    ``g_i = sum_m h_{i,m}`` happens in-tile, so the kernel applies the
+    POST-combining effective gain; single-antenna models pass M=1, for
+    which the combine is a bit-exact no-op (a sum over one element).
+
 Two passes, like clip_norm: pass 1 (optional, only when a transmit clip is
 set) accumulates per-client squared norms over the full d; the host turns
 them into clip scales and per-client coefficients; pass 2 does the fused
@@ -42,11 +53,21 @@ def _sumsq_kernel(u_ref, out_ref):
     out_ref[...] += jnp.sum(u * u, axis=1, keepdims=True)
 
 
-def _combine_kernel(rx_ref, txsq_ref, u_ref, m_ref, z_ref, y_ref, e_ref):
-    """One fused tile: mask, client-weighted superposition, noise, energy.
+def _combine_kernel(g_ref, tx_ref, txm_ref, u_ref, m_ref, z_ref,
+                    y_ref, e_ref):
+    """One fused tile: mask, MRC combine, client-weighted superposition,
+    noise, energy.
 
-    rx_ref/txsq_ref: (r, 1) VMEM, revisited every step; u_ref: (r, block);
-    m_ref/z_ref/y_ref: (1, block); e_ref: (1, 1) accumulated across steps.
+    g_ref: (r, M) per-antenna true gains (M=1 for scalar channels);
+    tx_ref/txm_ref: (r, 1) transmit amplitudes / 0-1 transmit mask, all
+    revisited every step; u_ref: (r, block); m_ref/z_ref/y_ref:
+    (1, block); e_ref: (1, 1) accumulated across steps.
+
+    The receive coefficient is built in-tile: the all-ones-beam MRC
+    combine ``g_i = sum_m h_{i,m}`` (bit-exact identity at M=1), times
+    the transmit amplitude, times the transmit mask — so a dropped
+    client (txm=0) contributes exactly 0.0 to the MAC sum and 0.0 energy
+    without any (r, d) pre-masked intermediate.
     """
     i = pl.program_id(0)
 
@@ -54,10 +75,14 @@ def _combine_kernel(rx_ref, txsq_ref, u_ref, m_ref, z_ref, y_ref, e_ref):
     def _init():
         e_ref[0, 0] = jnp.zeros((), jnp.float32)
 
+    g_eff = jnp.sum(g_ref[...].astype(jnp.float32), axis=1, keepdims=True)
+    tx = tx_ref[...].astype(jnp.float32)
+    txm = txm_ref[...].astype(jnp.float32)
+    rxw = g_eff * tx * txm              # (r, 1) masked receive coefficients
     um = u_ref[...].astype(jnp.float32) * m_ref[...].astype(jnp.float32)
-    y_ref[...] = (jnp.sum(um * rx_ref[...], axis=0, keepdims=True)
+    y_ref[...] = (jnp.sum(um * rxw, axis=0, keepdims=True)
                   + z_ref[...]).astype(y_ref.dtype)
-    e_ref[0, 0] += jnp.sum(txsq_ref[...]
+    e_ref[0, 0] += jnp.sum((tx * tx * txm)
                            * jnp.sum(um * um, axis=1, keepdims=True))
 
 
@@ -80,18 +105,20 @@ def client_sumsq(updates: jnp.ndarray, *, block: int = 4096,
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def fused_combine(updates: jnp.ndarray, mask: jnp.ndarray,
-                  noise_dense: jnp.ndarray, rx_coeffs: jnp.ndarray,
-                  tx_sq: jnp.ndarray, *, block: int = 4096,
-                  interpret: bool = True):
-    """updates: (r, d_pad); mask/noise_dense: (1, d_pad); rx_coeffs/tx_sq:
-    (r, 1). d_pad % block == 0. Returns (y_dense (1, d_pad), energy (1, 1)).
-    """
+                  noise_dense: jnp.ndarray, gains_mat: jnp.ndarray,
+                  tx: jnp.ndarray, tx_mask: jnp.ndarray, *,
+                  block: int = 4096, interpret: bool = True):
+    """updates: (r, d_pad); mask/noise_dense: (1, d_pad); gains_mat:
+    (r, M) per-antenna true gains; tx/tx_mask: (r, 1). d_pad % block == 0.
+    Returns (y_dense (1, d_pad), energy (1, 1))."""
     r, d_pad = updates.shape
+    m_ant = gains_mat.shape[1]
     grid = (d_pad // block,)
     return pl.pallas_call(
         _combine_kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((r, m_ant), lambda i: (0, 0)),
             pl.BlockSpec((r, 1), lambda i: (0, 0)),
             pl.BlockSpec((r, 1), lambda i: (0, 0)),
             pl.BlockSpec((r, block), lambda i: (0, i)),
@@ -107,4 +134,4 @@ def fused_combine(updates: jnp.ndarray, mask: jnp.ndarray,
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(rx_coeffs, tx_sq, updates, mask, noise_dense)
+    )(gains_mat, tx, tx_mask, updates, mask, noise_dense)

@@ -2,8 +2,11 @@
 
 ``fused_transmit`` has the same contract as
 ``core.aggregation.aircomp_aggregate`` — same PRNG key => bit-identical
-channel-noise draw — plus the optional per-client transmit clip. It pads d
-up to a whole number of column tiles (zero pads are mask-annihilated, so
+channel-noise draw — plus the optional per-client transmit clip, the
+per-client transmit mask (the ``dropout`` scenario), and per-antenna
+gains with in-tile MRC combining (the ``mimo_mrc`` scenario) — the whole
+registered-channel-model matrix on the fast path (DESIGN.md §12). It pads
+d up to a whole number of column tiles (zero pads are mask-annihilated, so
 they change nothing), runs the one-or-two Pallas passes, and finishes with
 the O(d) server-side unscale. ``interpret=None`` (default) picks the real
 compiled kernel on TPU and the Pallas interpreter everywhere else; pass an
@@ -29,16 +32,19 @@ def _pad_cols(x: jnp.ndarray, d_pad: int) -> jnp.ndarray:
 def fused_pipeline(u: jnp.ndarray, mask: jnp.ndarray, z_dense: jnp.ndarray,
                    gains: jnp.ndarray, beta, *,
                    clip: Optional[float] = None, gains_est=None,
-                   interpret: Optional[bool] = None, block: int = 4096):
+                   tx_mask=None, interpret: Optional[bool] = None,
+                   block: int = 4096):
     """Kernel-invoking core shared by :func:`fused_transmit` (whole cohort)
     and ``aggregation.aircomp_aggregate_sharded`` (per-shard client slice,
     zero noise — the channel noise is added once after the cross-device
-    psum). u: (r_any, d) f32; mask/z_dense: (d,). Returns
-    (y_dense (d,), energy) — the dense received signal BEFORE the
-    server-side 1/(r beta) unscale."""
+    psum). u: (r_any, d) f32; mask/z_dense: (d,); gains: (r_any,)
+    effective or (r_any, M) per-antenna (combined IN-TILE by the kernel);
+    tx_mask: optional (r_any,) 0/1 transmit indicator folded into the
+    in-tile coefficients. Returns (y_dense (d,), energy) — the dense
+    received signal BEFORE the server-side 1/(r beta) unscale."""
     if interpret is None:   # compiled kernel on TPU, interpreter elsewhere
         interpret = jax.default_backend() != "tpu"
-    d = u.shape[-1]
+    r, d = u.shape[0], u.shape[-1]
     # pick the tile count first, then round the per-tile width up to a
     # whole number of lanes — pads at most one lane-multiple per tile
     # instead of up to a whole `block` of dead columns (d=4100 with a
@@ -51,46 +57,62 @@ def fused_pipeline(u: jnp.ndarray, mask: jnp.ndarray, z_dense: jnp.ndarray,
         sumsq = client_sumsq(u_pad, block=blk, interpret=interpret)
         scales = ref.scales_from_norms(jnp.sqrt(sumsq[:, 0]), clip)
     else:
-        scales = jnp.ones((u.shape[0],), jnp.float32)
-    tx, rx = ref.transmit_coeffs(gains, beta, scales, gains_est)
+        scales = jnp.ones((r,), jnp.float32)
+    g_mat = (gains if gains.ndim == 2 else gains[:, None]).astype(
+        jnp.float32)
+    tx, _ = ref.transmit_coeffs(gains, beta, scales, gains_est)
+    txm = (jnp.ones((r,), jnp.float32) if tx_mask is None
+           else tx_mask.astype(jnp.float32))
     y2d, e2d = fused_combine(
         u_pad, _pad_cols(mask[None, :], d_pad),
         _pad_cols(z_dense[None, :], d_pad),
-        rx.astype(jnp.float32)[:, None],
-        (tx.astype(jnp.float32) ** 2)[:, None],
+        g_mat, tx.astype(jnp.float32)[:, None], txm[:, None],
         block=blk, interpret=interpret)
     return y2d[0, :d], e2d[0, 0]
 
 
 def fused_transmit(updates_flat: jnp.ndarray, idx: jnp.ndarray,
                    gains: jnp.ndarray, beta, noise_key, *, d: int,
-                   sigma0: float, r: int, clip: Optional[float] = None,
-                   gains_est=None, unbiased_rescale: bool = False,
+                   sigma0: float, r, clip: Optional[float] = None,
+                   gains_est=None, tx_mask=None,
+                   unbiased_rescale: bool = False,
                    use_kernel: bool = True,
                    interpret: Optional[bool] = None,
                    block: int = 4096):
     """Fused Alg. 2 lines 12-16 for the whole (r, d) update batch.
 
-    updates_flat: (r, d); idx: (k,) rand_k subset; gains: (r,) |h_i|;
+    updates_flat: (r, d); idx: (k,) rand_k subset; gains: (r,) effective
+    |h_i| or (r, M) per-antenna magnitudes (MRC-combined in-tile);
     clip: optional per-client l2 cap C on the transmitted update
-    (s_i = min(1, C/||Delta_i||), applied before power scaling).
+    (s_i = min(1, C/||Delta_i||), applied before power scaling);
+    tx_mask: optional (r,) 0/1 transmit indicator — masked clients
+    contribute no signal and no energy (folded into the in-tile
+    coefficients, DESIGN.md §12), and the server unscales by the
+    REALIZED transmitter count (floored at 1) instead of the nominal r.
+
+    ``sigma0`` must already be the channel model's POST-combining
+    ``sigma_eff`` (``sqrt(M) sigma_0`` for mimo_mrc) — the noise draw is
+    the single PRNG-critical draw shared with the unfused path
+    (``ref.dense_noise_and_mask``).
 
     Returns (delta_hat (d,), energy, y (k,)) exactly like
     ``aircomp_aggregate``.
     """
     mask, z_dense = ref.dense_noise_and_mask(idx, noise_key, sigma0, d)
     u = updates_flat.astype(jnp.float32)
+    r_div = r if tx_mask is None else jnp.maximum(jnp.sum(tx_mask), 1.0)
 
     if use_kernel:
         y_dense, energy = fused_pipeline(
             u, mask, z_dense, gains, beta, clip=clip, gains_est=gains_est,
-            interpret=interpret, block=block)
+            tx_mask=tx_mask, interpret=interpret, block=block)
     else:
         scales = ref.clip_scales(u, clip)
         tx, rx = ref.transmit_coeffs(gains, beta, scales, gains_est)
-        y_dense, energy = ref.pfels_transmit_ref(u, mask, z_dense, rx,
-                                                 tx ** 2)
+        rx_eff, tx_sq = ref.masked_coeffs(tx, rx, tx_mask)
+        y_dense, energy = ref.pfels_transmit_ref(u, mask, z_dense, rx_eff,
+                                                 tx_sq)
 
-    delta_hat = ref.server_unscale(y_dense, idx, beta, r, d,
+    delta_hat = ref.server_unscale(y_dense, idx, beta, r_div, d,
                                    unbiased_rescale)
     return delta_hat, energy, y_dense[idx]

@@ -66,13 +66,39 @@ def clip_scales(updates: jnp.ndarray, clip: Optional[float]) -> jnp.ndarray:
                                              axis=1), clip)
 
 
+def effective_gains(gains: jnp.ndarray) -> jnp.ndarray:
+    """(r,) post-combining effective gains from a (r,) scalar-channel
+    vector (identity) or a (r, M) per-antenna matrix (the all-ones-beam
+    MRC combine ``g_i = sum_m h_{i,m}`` — bit-exact identity at M=1).
+    The single definition the fused kernel's in-tile combine, this
+    oracle, and the β design must agree on (DESIGN.md §12)."""
+    return gains if gains.ndim == 1 else jnp.sum(gains, axis=-1)
+
+
 def transmit_coeffs(gains, beta, scales, gains_est=None):
     """(tx, rx): tx_i = (beta/|h_i^est|) s_i is the per-client transmit
     amplitude; rx_i = |h_i| tx_i is the coefficient the MAC applies to
-    Delta_i at the receiver (perfect CSI: rx_i = beta s_i)."""
-    comp = gains_est if gains_est is not None else gains
+    Delta_i at the receiver (perfect CSI: rx_i = beta s_i). ``gains``
+    may be (r,) effective or (r, M) per-antenna (combined here); the
+    observed ``gains_est`` is always the effective view — devices
+    precompensate with the post-combining gain they experience."""
+    eff = effective_gains(gains)
+    comp = gains_est if gains_est is not None else eff
     tx = (beta / comp) * scales
-    return tx, gains * tx
+    return tx, eff * tx
+
+
+def masked_coeffs(tx, rx, tx_mask=None):
+    """(rx_eff, tx_sq): the receive coefficients and squared transmit
+    amplitudes with an optional (r,) 0/1 transmit mask folded in — a
+    masked client contributes zero signal and zero energy. This O(r)
+    fold is the unfused analogue of the kernel's in-tile ``txm``
+    column; both paths mask via the coefficients, never via an (r, d)
+    pre-masked intermediate (DESIGN.md §12)."""
+    tx_sq = tx * tx
+    if tx_mask is None:
+        return rx, tx_sq
+    return rx * tx_mask, tx_sq * tx_mask
 
 
 def pfels_transmit_ref(updates: jnp.ndarray, mask: jnp.ndarray,

@@ -1,0 +1,184 @@
+"""Unit tests for the perf-regression gate (tools/check_bench.py) and the
+trajectory emitter (benchmarks.kernel_bench.emit) on SYNTHETIC
+trajectories — no benchmark actually runs here.
+
+The gate's contract (DESIGN.md §12): pinned rows compare fused/oracle
+RATIOS between the committed baseline and a fresh candidate, so machine
+speed cancels; a vanished pinned row is a hard failure; a schema-version
+mismatch is an actionable exit-2 error, never a silent pass.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "tools"))
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))))
+
+import check_bench
+
+
+def _row(op, us, oracle=None, pinned=False, **extra):
+    r = {"op": op, "config": "synthetic", "us_per_call": us,
+         "oracle_us_per_call": oracle, "pinned": pinned}
+    r.update(extra)
+    return r
+
+
+def _doc(rows, schema=check_bench.SCHEMA_VERSION):
+    return {"schema_version": schema, "meta": {"synthetic": True},
+            "rows": rows}
+
+
+BASE = _doc([
+    _row("scenario_dropout_vmapped_fused", 100.0, oracle=120.0,
+         pinned=True),
+    _row("scenario_dropout_vmapped_unfused", 120.0),
+    _row("rounds_trainer_run", 500.0),  # unpinned: never gated
+])
+
+
+def _dump(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_identical_trajectory_passes():
+    assert check_bench.check(BASE, BASE, tolerance=0.25) == 0
+
+
+def test_synthetic_2x_slowdown_fails(tmp_path, capsys):
+    """The ISSUE-6 acceptance criterion: doubling a pinned row's time
+    (oracle unchanged) doubles its ratio and must fail the gate —
+    end-to-end through main() so the exit code is exercised too."""
+    cand = _doc([
+        _row("scenario_dropout_vmapped_fused", 200.0, oracle=120.0,
+             pinned=True),
+        _row("scenario_dropout_vmapped_unfused", 120.0),
+    ])
+    rc = check_bench.main([
+        "--candidate", _dump(tmp_path, "cand.json", cand),
+        "--baseline", _dump(tmp_path, "base.json", BASE)])
+    assert rc == 1
+    assert "FAIL scenario_dropout_vmapped_fused" in capsys.readouterr().out
+
+
+def test_machine_speed_cancels():
+    """A uniformly 10x slower machine keeps every ratio — no failure."""
+    cand = _doc([
+        _row("scenario_dropout_vmapped_fused", 1000.0, oracle=1200.0,
+             pinned=True),
+        _row("scenario_dropout_vmapped_unfused", 1200.0),
+    ])
+    assert check_bench.check(cand, BASE, tolerance=0.25) == 0
+
+
+def test_tolerance_respected():
+    """A 20% ratio regression passes at tol=0.25 and fails at tol=0.1."""
+    cand = _doc([_row("scenario_dropout_vmapped_fused", 120.0,
+                      oracle=120.0, pinned=True)])
+    assert check_bench.check(cand, BASE, tolerance=0.25) == 0
+    assert check_bench.check(cand, BASE, tolerance=0.10) == 1
+
+
+def test_per_row_tolerance_overrides_global():
+    base = _doc([_row("op_a", 100.0, oracle=100.0, pinned=True,
+                      tolerance=0.5)])
+    cand = _doc([_row("op_a", 140.0, oracle=100.0, pinned=True)])
+    # global tol=0.1 would fail, but the baseline row carries tol=0.5
+    assert check_bench.check(cand, base, tolerance=0.10) == 0
+    cand2 = _doc([_row("op_a", 160.0, oracle=100.0, pinned=True)])
+    assert check_bench.check(cand2, base, tolerance=0.10) == 1
+
+
+def test_missing_pinned_row_hard_fails(capsys):
+    """Renaming (or dropping) a pinned row without refreshing the
+    committed trajectory must fail, not silently skip the gate."""
+    cand = _doc([
+        _row("scenario_dropout_vmapped_fused_RENAMED", 100.0,
+             oracle=120.0, pinned=True)])
+    assert check_bench.check(cand, BASE, tolerance=0.25) >= 1
+    assert "missing from" in capsys.readouterr().out
+
+
+def test_new_pinned_row_is_not_a_failure(capsys):
+    cand = _doc(BASE["rows"] + [_row("op_new", 10.0, oracle=20.0,
+                                     pinned=True)])
+    assert check_bench.check(cand, BASE, tolerance=0.25) == 0
+    assert "new  op_new" in capsys.readouterr().out
+
+
+def test_schema_mismatch_is_actionable(tmp_path, capsys):
+    rc = check_bench.main([
+        "--candidate", _dump(tmp_path, "cand.json", _doc([], schema=999)),
+        "--baseline", _dump(tmp_path, "base.json", BASE)])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "schema_version" in err and "regenerate" in err
+
+
+def test_malformed_file_exits_2(tmp_path):
+    p = tmp_path / "junk.json"
+    p.write_text("{not json")
+    rc = check_bench.main(["--candidate", str(p),
+                           "--baseline", str(p)])
+    assert rc == 2
+
+
+def test_pinned_row_without_oracle_rejected():
+    doc = _doc([_row("op_a", 100.0, oracle=None, pinned=True)])
+    with pytest.raises(check_bench.BenchFormatError):
+        check_bench.pinned_ratios(doc, "<synthetic>")
+
+
+def test_committed_trajectory_loads_and_self_checks():
+    """The committed BENCH_*.json must satisfy its own gate exactly."""
+    path = check_bench.newest_baseline()
+    doc = check_bench.load(path)
+    assert check_bench.check(doc, doc, tolerance=0.0,
+                             cand_path=path, base_path=path) == 0
+    pinned = [r for r in doc["rows"] if r.get("pinned")]
+    assert pinned, f"{path} pins no rows — the gate would gate nothing"
+
+
+def test_emit_pairs_pinned_rows_with_oracles(tmp_path):
+    """kernel_bench.emit joins each pinned row to its oracle's us/call
+    and refuses to write a trajectory that splits a pinned/oracle pair."""
+    from benchmarks import kernel_bench
+
+    rows = [("pfels_transmit_fused_pallas", 50.0, "r=16"),
+            ("pfels_transmit_unfused", 80.0, "r=16")]
+    out = str(tmp_path / "t.json")
+    kernel_bench.emit(rows, out)
+    doc = check_bench.load(out)
+    by_op = {r["op"]: r for r in doc["rows"]}
+    assert by_op["pfels_transmit_fused_pallas"]["pinned"]
+    assert by_op["pfels_transmit_fused_pallas"]["oracle_us_per_call"] \
+        == 80.0
+    assert not by_op["pfels_transmit_unfused"]["pinned"]
+
+    with pytest.raises(ValueError, match="oracle"):
+        kernel_bench.emit(rows[:1], str(tmp_path / "t2.json"))
+
+
+def test_schema_versions_in_lockstep():
+    from benchmarks import kernel_bench
+    assert kernel_bench.SCHEMA_VERSION == check_bench.SCHEMA_VERSION
+
+
+def test_time_uses_perf_counter_and_floors_warmup():
+    """_time must never time the compile call: even warmup=0 burns one
+    untimed call first, and timings come from the monotonic clock."""
+    from benchmarks import kernel_bench
+
+    calls = []
+    us = kernel_bench._time(lambda: calls.append(1), reps=3, warmup=0)
+    assert us >= 0.0
+    assert len(calls) == 4  # 1 floored warmup + 3 timed
+    calls.clear()
+    kernel_bench._time(lambda: calls.append(1), reps=2, warmup=3)
+    assert len(calls) == 5

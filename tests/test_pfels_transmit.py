@@ -152,6 +152,219 @@ def test_kernel_matches_ref_module():
     np.testing.assert_allclose(e_k, e_ref, rtol=1e-5)
 
 
+# ------------------------------------- fused-default scenario sweep (PR 6)
+# use_fused_kernel=True is the DEFAULT execution mode for every registered
+# channel model on both execution paths; these properties pin fused ==
+# unfused-oracle fp32 parity for the in-tile transmit mask (dropout), the
+# in-tile MRC combine (gains_ant matrix), and their interaction with
+# clip / imperfect CSI — plus the all-dropped-round realized-r floor.
+
+def _scenario_problem(r, d, k, *, M=None, dropped=0, seed=5):
+    key = jax.random.PRNGKey(seed)
+    updates = jax.random.normal(key, (r, d))
+    if M is not None:
+        gains_ant = (jnp.abs(jax.random.normal(
+            jax.random.fold_in(key, 1), (r, M))) * 0.05 + 0.01)
+        gains = jnp.sum(gains_ant, axis=1)       # the effective MRC view
+    else:
+        gains_ant = None
+        gains = (jnp.abs(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (r,))) * 0.05 + 0.01)
+    tx_mask = None
+    if dropped:
+        tx_mask = jnp.ones((r,)).at[
+            jnp.arange(dropped)].set(0.0).astype(jnp.float32)
+    idx = randk.sample_indices(jax.random.fold_in(key, 2), d, k)
+    nk = jax.random.fold_in(key, 3)
+    return updates, gains, gains_ant, tx_mask, idx, nk
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jax_ref"])
+def test_fused_tx_mask_matches_unfused(use_kernel):
+    """In-tile masking (per-client coefficient fold) == the oracle's
+    (r, d) pre-mask + realized-r unscale."""
+    r, d, k = 5, 80, 24
+    updates, gains, _, tx_mask, idx, nk = _scenario_problem(
+        r, d, k, dropped=2)
+    kw = dict(d=d, sigma0=0.3, r=r, tx_mask=tx_mask)
+    dh0, e0, y0 = aggregation.aircomp_aggregate(
+        updates, idx, gains, 0.8, nk, **kw)
+    dh1, e1, y1 = aggregation.aircomp_aggregate_fused(
+        updates, idx, gains, 0.8, nk, use_kernel=use_kernel, **kw)
+    np.testing.assert_allclose(dh1, dh0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e1, e0, rtol=1e-5)
+    np.testing.assert_allclose(y1, y0, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jax_ref"])
+def test_fused_mrc_gains_matrix_matches_effective(use_kernel):
+    """The kernel's in-tile all-ones-beam combine over a (r, M) gains_ant
+    matrix == the oracle on the pre-combined effective gains, and == the
+    fused path fed the effective (r,) view directly."""
+    r, d, k, M = 4, 70, 21, 4
+    updates, gains, gains_ant, _, idx, nk = _scenario_problem(
+        r, d, k, M=M)
+    kw = dict(d=d, sigma0=0.25, r=r)
+    dh0, e0, y0 = aggregation.aircomp_aggregate(
+        updates, idx, gains, 0.9, nk, **kw)
+    dh1, e1, y1 = aggregation.aircomp_aggregate_fused(
+        updates, idx, gains, 0.9, nk, gains_ant=gains_ant,
+        use_kernel=use_kernel, **kw)
+    dh2, e2, _ = aggregation.aircomp_aggregate_fused(
+        updates, idx, gains, 0.9, nk, use_kernel=use_kernel, **kw)
+    np.testing.assert_allclose(dh1, dh0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e1, e0, rtol=1e-5)
+    np.testing.assert_allclose(y1, y0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(dh1, dh2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e1, e2, rtol=1e-5)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jax_ref"])
+def test_fused_mask_mrc_csi_clip_combined(use_kernel):
+    """Everything at once: (r, M) gains, transmit mask, transmit clip,
+    imperfect-CSI precompensation and unbiased rescale."""
+    r, d, k, M = 6, 90, 30, 3
+    updates, gains, gains_ant, tx_mask, idx, nk = _scenario_problem(
+        r, d, k, M=M, dropped=2, seed=11)
+    updates = 3.0 * updates
+    kw = dict(d=d, sigma0=0.2, r=r, tx_mask=tx_mask, clip=1.0,
+              gains_est=gains * 1.07, unbiased_rescale=True)
+    dh0, e0, y0 = aggregation.aircomp_aggregate(
+        updates, idx, gains, 0.7, nk, **kw)
+    dh1, e1, y1 = aggregation.aircomp_aggregate_fused(
+        updates, idx, gains, 0.7, nk, gains_ant=gains_ant,
+        use_kernel=use_kernel, **kw)
+    np.testing.assert_allclose(dh1, dh0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e1, e0, rtol=1e-5)
+    np.testing.assert_allclose(y1, y0, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jax_ref"])
+def test_fused_all_dropped_round_is_finite(use_kernel):
+    """tx_mask all zero: the realized-r floor (max(sum mask, 1)) keeps the
+    reconstruction finite — delta_hat is exactly noise/beta on the
+    support, energy is exactly zero — on oracle and fused paths alike."""
+    r, d, k = 4, 60, 15
+    updates, gains, _, _, idx, nk = _scenario_problem(r, d, k)
+    tx_mask = jnp.zeros((r,), jnp.float32)
+    kw = dict(d=d, sigma0=0.5, r=r, tx_mask=tx_mask)
+    dh0, e0, _ = aggregation.aircomp_aggregate(
+        updates, idx, gains, 0.8, nk, **kw)
+    dh1, e1, _ = aggregation.aircomp_aggregate_fused(
+        updates, idx, gains, 0.8, nk, use_kernel=use_kernel, **kw)
+    for dh, e in ((dh0, e0), (dh1, e1)):
+        assert bool(jnp.all(jnp.isfinite(dh)))
+        np.testing.assert_allclose(e, 0.0, atol=1e-12)
+    np.testing.assert_allclose(dh1, dh0, rtol=1e-6, atol=1e-7)
+    # floor divisor is 1, so the support carries the raw noise over beta
+    _, z = tref.dense_noise_and_mask(idx, nk, 0.5, d)
+    np.testing.assert_allclose(np.asarray(dh0)[np.asarray(idx)],
+                               np.asarray(z)[np.asarray(idx)] / 0.8,
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_realized_r_floor():
+    assert aggregation.realized_r(None, 7) == 7
+    assert float(aggregation.realized_r(jnp.zeros((5,)), 5)) == 1.0
+    assert float(aggregation.realized_r(
+        jnp.array([1.0, 0.0, 1.0]), 3)) == 2.0
+
+
+_SCENARIO_KW = {"markov_fading": dict(markov_rho=0.9),
+                "mimo_mrc": dict(num_antennas=4),
+                "dropout": dict(dropout_prob=0.4)}
+_VARIANTS = {"default": {},
+             "ef_clip": dict(error_feedback=True, transmit_clip=0.5),
+             "csi": {}}  # csi flips channel.csi_error below
+
+
+def _channel_model_names():
+    from repro.core.channels import list_channel_models
+    return list_channel_models()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("variant", sorted(_VARIANTS))
+@pytest.mark.parametrize("model", _channel_model_names())
+def test_fused_default_round_parity_all_models(problem, model, variant):
+    """Trainer-level sweep: for EVERY registered channel model, the
+    fused-default round == the unfused escape hatch to fp32 tolerance,
+    under error feedback + transmit clip and under imperfect CSI —
+    2 Trainer.run rounds, same keys."""
+    from repro.configs import ChannelConfig
+    from repro.fl import Trainer
+    from repro.fl.api import replace as st_replace
+
+    params, d, unravel, (x, y), loss_fn = problem
+    chan_kw = dict(_SCENARIO_KW.get(model, {}))
+    if variant == "csi":
+        chan_kw["csi_error"] = 0.1
+    outs = []
+    for fused in (True, False):
+        cfg = PFELSConfig(num_clients=30, clients_per_round=4,
+                          local_steps=2, rounds=2, use_fused_kernel=fused,
+                          **_VARIANTS[variant])
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, channel=ChannelConfig(model=model, **chan_kw))
+        trainer = Trainer(cfg, loss_fn, params)
+        state = st_replace(trainer.init(jax.random.PRNGKey(1)),
+                           key=jax.random.PRNGKey(2))
+        outs.append(trainer.run(state, x, y, rounds=2))
+    (s1, m1), (s0, m0) = outs
+    flat1 = ravel_pytree(s1.params)[0]
+    flat0 = ravel_pytree(s0.params)[0]
+    np.testing.assert_allclose(flat1, flat0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1["energy"]),
+                               np.asarray(m0["energy"]), rtol=1e-4,
+                               atol=1e-8)
+    np.testing.assert_allclose(np.asarray(m1["beta"]),
+                               np.asarray(m0["beta"]), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(m1["eps_round"]),
+                               np.asarray(m0["eps_round"]), rtol=1e-5)
+
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >= 2 host devices (CI runs the fast tier on 8)")
+
+
+@needs_devices
+def test_sharded_fused_mask_and_mrc_matches_global_oracle():
+    """aircomp_aggregate_sharded(use_kernel=True) with a transmit mask
+    AND a (r_local, M) per-antenna gains shard == the single-device
+    unfused oracle on the full cohort — the psum path of the fused
+    default."""
+    import numpy as onp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.launch.mesh import shard_map_compat
+
+    n_dev = len(jax.devices())
+    r, d, k, M = n_dev, 96, 32, 4
+    updates, gains, gains_ant, tx_mask, idx, nk = _scenario_problem(
+        r, d, k, M=M, dropped=max(1, r // 4), seed=21)
+    kw = dict(d=d, sigma0=0.3, r=r)
+    dh0, e0, y0 = aggregation.aircomp_aggregate(
+        updates, idx, gains, 0.8, nk, tx_mask=tx_mask, **kw)
+
+    mesh = Mesh(onp.asarray(jax.devices()), ("c",))
+    fn = shard_map_compat(
+        lambda u, g, m: aggregation.aircomp_aggregate_sharded(
+            u, idx, g, 0.8, nk, axis_name="c", use_kernel=True,
+            tx_mask_local=m, **kw),
+        mesh=mesh, in_specs=(P("c"), P("c"), P("c")),
+        out_specs=(P(), P(), P()))
+    dh1, e1, y1 = fn(updates, gains_ant, tx_mask)
+    np.testing.assert_allclose(dh1, dh0, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(e1, e0, rtol=1e-5)
+    np.testing.assert_allclose(y1, y0, rtol=1e-5, atol=1e-6)
+
+
 # ------------------------------------------------------- round-level wiring
 
 @pytest.fixture(scope="module")

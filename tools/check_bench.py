@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""Perf-regression gate over the committed bench trajectory (DESIGN.md §12).
+
+Compares a fresh ``kernel_bench --emit`` run (the *candidate*) against the
+newest committed ``benchmarks/BENCH_*.json`` (the *baseline*). The gated
+quantity is the fused/oracle RATIO of each pinned row::
+
+    ratio = us_per_call / oracle_us_per_call
+
+Both runs measure the ratio on THEIR OWN machine, so absolute machine
+speed cancels — a committed trajectory generated on a dev box still gates
+a CI runner. A pinned row fails when::
+
+    candidate_ratio > baseline_ratio * (1 + tolerance)
+
+Usage::
+
+    PYTHONPATH=src python tools/check_bench.py --candidate /tmp/bench.json
+    ... --baseline benchmarks/BENCH_6.json --tolerance 0.25
+
+Exit codes: 0 ok, 1 regression / missing pinned row, 2 unusable input
+(schema-version mismatch, malformed file) — distinct so CI can tell "the
+code got slower" from "the gate itself needs attention".
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_TOLERANCE = 0.25
+
+# the schema this gate knows how to read (kept in lockstep with
+# benchmarks.kernel_bench.SCHEMA_VERSION; duplicated literally so the
+# gate runs without importing jax)
+SCHEMA_VERSION = 1
+
+
+class BenchFormatError(Exception):
+    """Input that cannot be compared (exit 2), with a remedy attached."""
+
+
+def newest_baseline() -> str:
+    paths = sorted(glob.glob(os.path.join(ROOT, "benchmarks",
+                                          "BENCH_*.json")))
+    if not paths:
+        raise BenchFormatError(
+            "no committed benchmarks/BENCH_*.json baseline found; generate "
+            "one with `benchmarks/run.sh --emit benchmarks/BENCH_<pr>.json`"
+            " and commit it")
+    return paths[-1]
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise BenchFormatError(f"cannot read bench file {path}: {e}")
+    ver = doc.get("schema_version")
+    if ver != SCHEMA_VERSION:
+        raise BenchFormatError(
+            f"{path}: schema_version {ver!r} != supported {SCHEMA_VERSION}."
+            f" If kernel_bench's schema moved, regenerate BOTH trajectories"
+            f" with the current `benchmarks/run.sh --emit ...` and update"
+            f" tools/check_bench.py's SCHEMA_VERSION in the same PR.")
+    if not isinstance(doc.get("rows"), list):
+        raise BenchFormatError(f"{path}: missing 'rows' list")
+    return doc
+
+
+def pinned_ratios(doc: dict, path: str) -> dict:
+    """op -> (fused/oracle ratio, per-row tolerance or None) for every
+    pinned row. A baseline row may carry a ``tolerance`` field to widen
+    (or tighten) the gate for that op alone — interpret-mode rows with
+    noisy Python-loop timings want a looser leash than compiled ones."""
+    out = {}
+    for row in doc["rows"]:
+        if not row.get("pinned"):
+            continue
+        op, us, oracle = row.get("op"), row.get("us_per_call"), \
+            row.get("oracle_us_per_call")
+        if not op or not us or not oracle:
+            raise BenchFormatError(
+                f"{path}: pinned row {op!r} needs positive us_per_call and"
+                f" oracle_us_per_call (the gate compares their ratio)")
+        out[op] = (us / oracle, row.get("tolerance"))
+    return out
+
+
+def check(candidate: dict, baseline: dict, *, tolerance: float,
+          cand_path: str = "<candidate>",
+          base_path: str = "<baseline>") -> int:
+    """Print the verdict per pinned row; return count of failures."""
+    cand = pinned_ratios(candidate, cand_path)
+    base = pinned_ratios(baseline, base_path)
+    bad = 0
+    for op in sorted(base):
+        base_ratio, row_tol = base[op]
+        if op not in cand:
+            # renamed/dropped pinned rows are a hard failure: a silently
+            # vanished row would freeze its regression gate forever
+            print(f"FAIL {op}: pinned in baseline but missing from "
+                  f"candidate (renamed or dropped? update the committed "
+                  f"trajectory in the same PR)")
+            bad += 1
+            continue
+        tol = tolerance if row_tol is None else float(row_tol)
+        cand_ratio = cand[op][0]
+        limit = base_ratio * (1.0 + tol)
+        verdict = "FAIL" if cand_ratio > limit else "ok  "
+        print(f"{verdict} {op}: ratio {cand_ratio:.3f} vs baseline "
+              f"{base_ratio:.3f} (limit {limit:.3f}, tol {tol:.0%})")
+        if cand_ratio > limit:
+            bad += 1
+    for op in sorted(set(cand) - set(base)):
+        print(f"new  {op}: ratio {cand[op][0]:.3f} (no baseline yet — pin "
+              f"it by refreshing the committed trajectory)")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--candidate", required=True,
+                    help="fresh kernel_bench --emit JSON to vet")
+    ap.add_argument("--baseline", default=None,
+                    help="committed trajectory (default: newest "
+                         "benchmarks/BENCH_*.json)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed fractional ratio regression per pinned "
+                         "row (default %(default)s)")
+    args = ap.parse_args(argv)
+    try:
+        base_path = args.baseline or newest_baseline()
+        cand = load(args.candidate)
+        base = load(base_path)
+        bad = check(cand, base, tolerance=args.tolerance,
+                    cand_path=args.candidate, base_path=base_path)
+    except BenchFormatError as e:
+        print(f"check_bench: {e}", file=sys.stderr)
+        return 2
+    print(f"{bad} pinned row(s) regressed" if bad
+          else "all pinned rows within tolerance")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -69,30 +69,59 @@ def _cases():
 
     algorithm × execution path, plus the channel-model rows (``chan_*``)
     and an error-feedback row. ``needs_devices`` > 1 marks cases whose
-    digests depend on the device count (sharded cohort psum)."""
+    digests depend on the device count (sharded cohort psum).
+
+    PR 6 flipped ``use_fused_kernel`` to default ``True``, so every row
+    that documented the old default now pins ``use_fused_kernel=False``
+    explicitly — their digests are the UNCHANGED pre-flip pins (verified
+    exact by ``--check`` across the flip) — and the ``*-fused*`` rows pin
+    the new in-kernel mask/MRC fast path per channel model and execution
+    path (fp32-parity with the unfused rows is property-tested in
+    tests/test_pfels_transmit.py; the digests differ only in the last
+    ulp of the accumulation order)."""
     cases = {}
     for alg in _ALL:
-        cases[f"{alg}-unfused"] = (dict(algorithm=alg), {}, 1)
+        cases[f"{alg}-unfused"] = (
+            dict(algorithm=alg, use_fused_kernel=False), {}, 1)
         cases[f"{alg}-streamed"] = (
-            dict(algorithm=alg, bank_backend="streamed"), {}, 1)
+            dict(algorithm=alg, bank_backend="streamed",
+                 use_fused_kernel=False), {}, 1)
         cases[f"{alg}-sharded"] = (
-            dict(algorithm=alg, client_sharding="cohort"), {}, 8)
+            dict(algorithm=alg, client_sharding="cohort",
+                 use_fused_kernel=False), {}, 8)
     for alg in _AIRCOMP:
         # the fused Pallas path only routes aircomp aggregation
         cases[f"{alg}-fused"] = (
             dict(algorithm=alg, use_fused_kernel=True), {}, 1)
     cases["pfels-error_feedback"] = (
-        dict(error_feedback=True, transmit_clip=0.5), {}, 1)
+        dict(error_feedback=True, transmit_clip=0.5,
+             use_fused_kernel=False), {}, 1)
+    # the fused default on the sharded-psum path (per-shard kernel)
+    cases["pfels-sharded-fused"] = (
+        dict(client_sharding="cohort"), {}, 8)
     # channel-registry scenarios (pfels; block_fading is every row above)
     for backend in ("resident", "streamed"):
         tag = "" if backend == "resident" else "-streamed"
         cases[f"chan_markov{tag}"] = (
-            dict(bank_backend=backend),
+            dict(bank_backend=backend, use_fused_kernel=False),
             dict(model="markov_fading", markov_rho=0.9), 1)
         cases[f"chan_mimo_mrc{tag}"] = (
-            dict(bank_backend=backend),
+            dict(bank_backend=backend, use_fused_kernel=False),
             dict(model="mimo_mrc", num_antennas=8), 1)
         cases[f"chan_dropout{tag}"] = (
+            dict(bank_backend=backend, use_fused_kernel=False),
+            dict(model="dropout", dropout_prob=0.4), 1)
+        # fused-default scenario rows (ISSUE 6): the in-kernel transmit
+        # mask (dropout), the in-tile MRC combine (mimo_mrc, M=4), and
+        # the stateful-carry fast path (markov) — pinned on both bank
+        # backends so the streamed cohort loop rides the same kernel
+        cases[f"chan_markov-fused{tag}"] = (
+            dict(bank_backend=backend),
+            dict(model="markov_fading", markov_rho=0.9), 1)
+        cases[f"chan_mimo_mrc-fused{tag}"] = (
+            dict(bank_backend=backend),
+            dict(model="mimo_mrc", num_antennas=4), 1)
+        cases[f"chan_dropout-fused{tag}"] = (
             dict(bank_backend=backend),
             dict(model="dropout", dropout_prob=0.4), 1)
     return cases
