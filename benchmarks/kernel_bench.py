@@ -272,6 +272,12 @@ PINNED = {
     "pfels_transmit_fused_pallas": "pfels_transmit_unfused",
     **{f"scenario_{tag}_{path}_fused": f"scenario_{tag}_{path}_unfused"
        for tag, _ in _SCENARIOS for path in ("vmapped", "sharded")},
+    # ISSUE 7: the compressor hooks (Support.active column, per-client
+    # encode, EF residual) must not erode the fused fast path — the
+    # carry-compressor row and the encode-hook row each gate their
+    # fused/oracle ratio
+    "compressor_top_k_ef_fused": "compressor_top_k_ef_unfused",
+    "compressor_stoch_quant_fused": "compressor_stoch_quant_unfused",
 }
 
 # per-row gate tolerance stamped into the emitted trajectory (overrides
@@ -281,6 +287,7 @@ PINNED = {
 # looser leash. A genuine 2x slowdown (ratio +100%) still fails every row.
 ROW_TOLERANCE = {
     "scenario_*": 0.75,
+    "compressor_*": 0.75,
     "pfels_transmit_fused_pallas": 0.5,
 }
 
@@ -319,6 +326,44 @@ def bench_scenarios(rows):
                 rows.append((f"scenario_{tag}_{path}_{mode}", us,
                              f"r={cfg0.clients_per_round},d={d},"
                              f"chan={chan.model}"))
+
+
+def bench_compressors(rows):
+    """One Trainer.step round per compressor-registry entry (DESIGN.md
+    §13) × {fused default, unfused oracle} on the shared FL problem — what
+    the Support.active column (threshold), the per-client encode hook
+    (stoch_quant), and the carry/EF residual path (top_k_ef) cost on the
+    round hot path relative to the seed rand_k round. The top_k_ef and
+    stoch_quant fused rows are pinned in the committed trajectory."""
+    import dataclasses
+
+    from repro.configs import CompressionSchedule, PFELSConfig
+    from repro.fl import Trainer
+    from repro.fl.api import replace
+
+    cfg0 = PFELSConfig(num_clients=30, clients_per_round=8, local_steps=2)
+    params, d, _, (x, y), loss_fn, _ = _fl_problem(cfg0)
+
+    variants = (
+        ("rand_k", dict(compressor="rand_k")),
+        ("top_k_ef", dict(compressor="top_k_ef", transmit_clip=0.5)),
+        ("threshold", dict(compressor="threshold", threshold_frac=0.3)),
+        ("stoch_quant", dict(compressor="stoch_quant", quant_bits=6,
+                             transmit_clip=0.5)),
+        ("sched_linear", dict(schedule=CompressionSchedule(
+            mode="linear", k_end_ratio=0.5))),
+    )
+    for tag, kw in variants:
+        for fused in (True, False):
+            cfg = dataclasses.replace(cfg0, use_fused_kernel=fused, **kw)
+            trainer = Trainer(cfg, loss_fn, params)
+            state = replace(trainer.init(jax.random.PRNGKey(1)),
+                            key=jax.random.PRNGKey(2))
+            us = _time(lambda: trainer.step(state, x, y)[0].prev_delta,
+                       reps=2)
+            mode = "fused" if fused else "unfused"
+            rows.append((f"compressor_{tag}_{mode}", us,
+                         f"r={cfg0.clients_per_round},d={d}"))
 
 
 def bench_micro(key, rows):
@@ -402,6 +447,7 @@ def run(only=None):
         ("channels", lambda: bench_channel_models(rows)),
         ("sharded", lambda: bench_sharded_round(rows)),
         ("scenarios", lambda: bench_scenarios(rows)),
+        ("compressors", lambda: bench_compressors(rows)),
     )
     for name, fn in groups:
         if only and not any(fnmatch.fnmatch(name, p) for p in only):
@@ -426,7 +472,8 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated fnmatch pattern(s) of bench "
                          "groups to run (micro, pfels_transmit, rounds, "
-                         "bank, channels, sharded, scenarios)")
+                         "bank, channels, sharded, scenarios, "
+                         "compressors)")
     args = ap.parse_args(argv)
     if args.warmup is not None:
         DEFAULT_WARMUP = args.warmup

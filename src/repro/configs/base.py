@@ -233,6 +233,45 @@ class ChannelConfig:
 
 
 @dataclass(frozen=True)
+class CompressionSchedule:
+    """DP-aware adaptive compression schedule (DESIGN.md §13).
+
+    Declarative policy; ``repro.core.compressors.schedules`` evaluates it
+    trace-safely inside the compiled scan from the round counter and the
+    ledger's running ε spend (``Trainer.run`` stays zero-host-round-trip).
+
+    ``mode``: "none" (the seed-exact default — every knob untouched),
+    "linear" (k budget and transmit power annealed linearly over
+    ``cfg.rounds``), or "budget" (same anneals, plus the per-round ε
+    ceiling becomes the remaining total budget ``cfg.epsilon·cfg.rounds``
+    spread over the rounds left, floored at ``eps_floor`` and never above
+    ``cfg.epsilon``). ``k_end_ratio``: final live fraction of the k
+    budget at round T (1.0 = no k anneal). ``power_end``: final P_i
+    multiplier at round T (1.0 = no power anneal).
+    """
+    mode: str = "none"            # none | linear | budget
+    k_end_ratio: float = 1.0      # final live k fraction at round T
+    power_end: float = 1.0        # final power-limit multiplier at T
+    eps_floor: float = 0.0        # budget mode: per-round eps floor
+
+    def __post_init__(self):
+        if self.mode not in ("none", "linear", "budget"):
+            raise ValueError(
+                f"schedule mode must be none|linear|budget, got "
+                f"{self.mode!r}")
+        if not 0.0 < self.k_end_ratio <= 1.0:
+            raise ValueError(
+                f"k_end_ratio must be in (0, 1], got {self.k_end_ratio}")
+        if not 0.0 < self.power_end <= 1.0:
+            raise ValueError(
+                f"power_end must be in (0, 1] (anneal down), got "
+                f"{self.power_end}")
+        if self.eps_floor < 0.0:
+            raise ValueError(
+                f"eps_floor must be >= 0, got {self.eps_floor}")
+
+
+@dataclass(frozen=True)
 class PFELSConfig:
     """Algorithm 2 hyper-parameters."""
     num_clients: int = 1000           # N
@@ -283,6 +322,21 @@ class PFELSConfig:
     # device memory is independent of num_clients (the population-scale
     # path; benchmarks/population_scale.py runs 100_000 clients).
     bank_backend: str = "resident"    # resident | streamed
+    # update-compression scheme (DESIGN.md §13): a repro.core.compressors
+    # registry key. "rand_k" is the paper's uniform draw (seed-exact);
+    # "top_k_ef" transmits the top coords of the released aggregate with
+    # mandatory error feedback; "threshold" hard-thresholds against
+    # threshold_frac * max|prev_delta| (static-width padded, live slots
+    # via Support.active); "stoch_quant" adds quant_bits-level unbiased
+    # stochastic quantization over rand-k with its own sensitivity bound.
+    # Consumed only by sparsifying AirComp algorithms (pfels).
+    compressor: str = "rand_k"
+    quant_bits: int = 8               # stoch_quant magnitude levels 2^(b-1)-1
+    threshold_frac: float = 0.1       # threshold: fraction of max|prev_delta|
+    # adaptive k / power / per-round-eps schedule (DESIGN.md §13);
+    # mode="none" is the seed-exact static default
+    schedule: CompressionSchedule = field(
+        default_factory=CompressionSchedule)
     channel: ChannelConfig = field(default_factory=ChannelConfig)
 
     def resolved_delta(self) -> float:

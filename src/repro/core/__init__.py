@@ -2,7 +2,7 @@
 channel model, Theorem-5 power control, client-level DP accounting, and
 AirComp aggregation (simulation + production modes)."""
 from repro.core import (aggregation, channel, channels, clipping,
-                        power_control, privacy, randk)
+                        compressors, power_control, privacy, randk)
 
-__all__ = ["aggregation", "channel", "channels", "clipping", "power_control",
-           "privacy", "randk"]
+__all__ = ["aggregation", "channel", "channels", "clipping", "compressors",
+           "power_control", "privacy", "randk"]

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 from repro.configs.base import ChannelConfig
 from repro.core import channel as chan
 from repro.core import randk
+from repro.core.compressors import base as comp_base
 from repro.kernels.pfels_transmit import ref as transmit_ref
 
 
@@ -30,11 +31,12 @@ def aircomp_aggregate(updates_flat, idx, gains, beta, noise_key, *,
                       d: int, sigma0: float, r: int,
                       unbiased_rescale: bool = False,
                       gains_est=None, clip: Optional[float] = None,
-                      tx_mask=None):
+                      tx_mask=None, active=None):
     """Exact Alg. 2 lines 12–16 (unfused reference path).
 
-    updates_flat: (r, d) per-client updates Delta_i; idx: (k,) rand_k subset;
-    gains: (r,) |h_i|. Clients transmit x_i = (beta/|h_i|) A Delta_i, the MAC
+    updates_flat: (r, d) per-client updates Delta_i; idx: (k,) static-width
+    support (the compressor's Support.idx, DESIGN.md §13); gains: (r,)
+    |h_i|. Clients transmit x_i = (beta/|h_i|) A Delta_i, the MAC
     superposes with gains, noise is added, the server reconstructs
     Delta_hat = A^T y / (r beta).
 
@@ -53,20 +55,31 @@ def aircomp_aggregate(updates_flat, idx, gains, beta, noise_key, *,
     transmitter count instead of the nominal r. None disables (seed
     behavior).
 
+    active (DESIGN.md §13): optional (k,) 0/1 live-slot column of the
+    support — deactivated slots carry no signal AND no receiver noise (an
+    unused subcarrier is simply not allocated, so nothing is measured on
+    it). None disables (seed behavior, every slot live).
+
     Returns (delta_hat (d,), energy, y (k,)).
     """
     k = idx.shape[0]
+    sup = comp_base.as_support(idx, active)
     if clip is not None:
         updates_flat = updates_flat * transmit_ref.clip_scales(
             updates_flat, clip)[:, None]
-    proj = jax.vmap(lambda u: randk.project(u, idx))(updates_flat)  # (r, k)
+    proj = jax.vmap(lambda u: comp_base.project(u, sup))(updates_flat)
     comp = gains_est if gains_est is not None else gains
     signals = (beta / comp)[:, None] * proj                         # x_i
     if tx_mask is not None:
         signals = signals * tx_mask[:, None]
     noise = sigma0 * jax.random.normal(noise_key, (k,))
+    if active is not None:
+        # drawn full-k-shape FIRST (the PRNG-critical draw has a fixed
+        # shape across schedules), then masked to the live slots
+        noise = noise * active
     y = chan.receive(signals, gains, noise)                         # (k,)
-    delta_hat = randk.unproject(y, idx, d) / (realized_r(tx_mask, r) * beta)
+    delta_hat = comp_base.decode_support(y, sup, d) / (
+        realized_r(tx_mask, r) * beta)
     if unbiased_rescale:
         delta_hat = delta_hat * (d / k)
     energy = jnp.sum(signals.astype(jnp.float32) ** 2)
@@ -79,7 +92,7 @@ def aircomp_aggregate_fused(updates_flat, idx, gains, beta, noise_key, *,
                             gains_est=None, clip: Optional[float] = None,
                             use_kernel: bool = True,
                             interpret: Optional[bool] = None,
-                            tx_mask=None, gains_ant=None):
+                            tx_mask=None, gains_ant=None, active=None):
     """Fused-pipeline variant of :func:`aircomp_aggregate` — identical
     contract and PRNG-noise draw, executed by the ``pfels_transmit`` Pallas
     kernel in one pass over tiles of d with no (r, d) sparsified/scaled
@@ -94,14 +107,16 @@ def aircomp_aggregate_fused(updates_flat, idx, gains, beta, noise_key, *,
     divisor is the realized transmitter count, floored at 1);
     ``gains_ant`` (r, M) routes the per-antenna magnitudes to the
     kernel's in-tile MRC combine (``gains`` stays the effective view the
-    β design and the unfused oracle consume — ``sum_m h_{i,m}``)."""
+    β design and the unfused oracle consume — ``sum_m h_{i,m}``);
+    ``active`` (the Support live-slot column, DESIGN.md §13) folds into
+    the kernel's dense mask/noise columns — no kernel change at all."""
     from repro.kernels.pfels_transmit.ops import fused_transmit
     return fused_transmit(
         updates_flat, idx, gains_ant if gains_ant is not None else gains,
         beta, noise_key, d=d, sigma0=sigma0, r=r, clip=clip,
         gains_est=gains_est, tx_mask=tx_mask,
         unbiased_rescale=unbiased_rescale,
-        use_kernel=use_kernel, interpret=interpret)
+        use_kernel=use_kernel, interpret=interpret, active=active)
 
 
 def aircomp_aggregate_sharded(updates_local, idx, gains_local, beta,
@@ -111,7 +126,7 @@ def aircomp_aggregate_sharded(updates_local, idx, gains_local, beta,
                               clip: Optional[float] = None,
                               use_kernel: bool = False,
                               interpret: Optional[bool] = None,
-                              tx_mask_local=None):
+                              tx_mask_local=None, active=None):
     """Sharded-cohort variant of :func:`aircomp_aggregate` (DESIGN.md §7).
 
     Call INSIDE a ``shard_map`` manual region over ``axis_name`` with this
@@ -137,11 +152,13 @@ def aircomp_aggregate_sharded(updates_local, idx, gains_local, beta,
     masked rows contribute nothing to the partial MAC sum or energy
     (folded into the per-client coefficients, never an (r, d) pre-masked
     intermediate), and the realized transmitter count — the unscale
-    divisor — is itself a ``psum`` over the shards. Returns
+    divisor — is itself a ``psum`` over the shards. ``active`` is the
+    replicated (k,) live-slot column of the support (DESIGN.md §13),
+    folded into the dense mask/noise like the fused path. Returns
     (delta_hat (d,), energy, y (k,)), all replicated over ``axis_name``.
     """
     mask, z_dense = transmit_ref.dense_noise_and_mask(idx, noise_key,
-                                                      sigma0, d)
+                                                      sigma0, d, active)
     zeros = jnp.zeros((d,), jnp.float32)
     u = updates_local.astype(jnp.float32)
     if use_kernel:

@@ -1,0 +1,38 @@
+"""Pluggable update-compression registry (DESIGN.md §13).
+
+``PFELSConfig.compressor`` names an entry here; the round body
+(``repro.fl.rounds._build_cohort_core``) consumes the entry's hooks
+instead of hard-coding the paper's rand-k sparsifier. Importing this
+package registers the four built-in schemes:
+
+  - ``rand_k``      — the paper's uniform random-k draw (seed-exact),
+                      incl. the ``randk_mode="server_topk"`` variant
+  - ``top_k_ef``    — magnitude top-k of the released aggregate, with
+                      mandatory error feedback (``carry``)
+  - ``threshold``   — hard-threshold sparsification, static-width padded
+                      via the ``Support.active`` column
+  - ``stoch_quant`` — int8/4-bit unbiased stochastic quantization with
+                      its own ``1 + sqrt(d)/levels`` sensitivity bound
+
+``schedules`` evaluates ``CompressionSchedule`` (k / power / per-round ε
+annealed against the remaining budget) inside the compiled scan.
+"""
+from repro.core.compressors.base import (QUANT_STREAM_TAG, Compressor,
+                                         Support, and_active, as_support,
+                                         carry_required, decode_support,
+                                         dense_mask, get_compressor,
+                                         list_compressors, project,
+                                         register_compressor,
+                                         sensitivity_factor, sparsify,
+                                         support_size,
+                                         unregister_compressor)
+from repro.core.compressors import (quant, rand_k, schedules,  # noqa: F401
+                                    threshold, top_k)
+
+__all__ = [
+    "Compressor", "Support", "QUANT_STREAM_TAG", "and_active",
+    "as_support", "carry_required", "decode_support", "dense_mask",
+    "get_compressor", "list_compressors", "project",
+    "register_compressor", "schedules", "sensitivity_factor", "sparsify",
+    "support_size", "unregister_compressor",
+]

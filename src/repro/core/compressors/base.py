@@ -1,0 +1,207 @@
+"""Compressor registry — the pluggable update-compression axis
+(DESIGN.md §13).
+
+Mirrors ``repro.core.channels``: a :class:`Compressor` entry supplies the
+points where compression schemes actually differ — support selection
+(which coordinates ride the MAC), the L2-sensitivity factor the privacy
+ledger's ε spend consumes, an optional per-client value transform
+(``encode``, e.g. stochastic quantization), and whether the scheme
+*requires* error-feedback state in ``TrainState`` (``carry``) — while the
+round body in ``repro.fl.rounds._build_cohort_core`` stays uniform.
+``PFELSConfig.compressor`` selects the entry; new schemes are
+``register_compressor`` calls, not round-body branches.
+
+Support contract: under jit the transmitted index set must have a STATIC
+width, so ``select_support`` returns a :class:`Support` of ``k`` budget
+coordinates plus an optional 0/1 ``active`` column — a compressor whose
+effective support is data-dependent (``threshold``) pads to the budget
+and deactivates the tail. ``active=None`` is the seed-exact fast path:
+every aggregation path then traces the exact pre-registry code.
+
+Sensitivity contract (DESIGN.md §13): ``sensitivity(cfg, d)`` returns a
+STATIC python-float multiplier ``s`` on the per-client norm bound
+``ψ = η τ C1`` — the Theorem-5 power cap and the Theorem-3 ε spend are
+both linear in C1, so threading ``C1·s`` through β design AND the ledger
+keeps the energy constraint and the DP guarantee consistent under
+norm-inflating transforms (stochastic quantization inflates worst-case
+``||q(u)|| ≤ (1 + sqrt(d)/levels)·||u||``). Support selection from the
+PREVIOUS round's released aggregate (top-k of ``|Δ̂_{t-1}|``) is
+post-processing of a DP output and costs factor 1.0 — the
+arxiv 2304.04164 analysis (docs/paper_map.md).
+
+PRNG contract (DESIGN.md §5): ``select_support`` receives exactly the
+round's ``support`` lane (``ks[3]``); compressors needing extra draws
+(stochastic rounding) must derive them by ``fold_in`` on that lane
+rather than widening the 7-lane split — the dropout-channel precedent.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core import randk
+
+# stochastic-rounding keys are fold_in(ks[3], _QUANT_TAG) then split per
+# client — forked off the support lane so the 7-lane round split stays
+# pinned (tests/test_bank.py::test_key_lane_contract)
+QUANT_STREAM_TAG = 0x5154  # "QT"
+
+
+class Support(NamedTuple):
+    """One round's transmitted coordinate set ω_t, static-width.
+
+    ``idx``: (k,) coordinate ids (the subcarrier map — shared across
+    clients, which is what AirComp alignment requires). ``active``:
+    optional (k,) 0/1 f32 column deactivating budget slots whose
+    coordinates are not actually transmitted this round (data-dependent
+    supports, annealed-k schedules). ``None`` means all k slots live —
+    the seed-exact fast path every pre-registry code path traces.
+    """
+    idx: jnp.ndarray
+    active: Optional[jnp.ndarray] = None
+
+
+def as_support(idx, active=None) -> Support:
+    """Normalize a raw (k,) index array — the pre-registry aggregation
+    contract — or an existing :class:`Support` into a Support."""
+    if isinstance(idx, Support):
+        return idx if active is None else Support(idx.idx, active)
+    return Support(jnp.asarray(idx), active)
+
+
+def support_size(sup: Support):
+    """k_used: the static budget width when every slot is live, else the
+    traced live-slot count (f32, for the β design's sqrt(k))."""
+    if sup.active is None:
+        return sup.idx.shape[0]
+    return jnp.sum(sup.active)
+
+
+def and_active(sup: Support, active: jnp.ndarray) -> Support:
+    """Intersect an extra (k,) 0/1 column (the k-schedule) into the
+    support."""
+    if sup.active is None:
+        return Support(sup.idx, active)
+    return Support(sup.idx, sup.active * active)
+
+
+def project(u: jnp.ndarray, sup: Support) -> jnp.ndarray:
+    """(d,) -> (k,) client-side projection A u — ``randk.project`` plus
+    the live-slot mask. THE single projection every transmit path (fused,
+    unfused, sharded, error-feedback residual) routes through."""
+    v = randk.project(u, sup.idx)
+    return v if sup.active is None else v * sup.active
+
+
+def decode_support(y: jnp.ndarray, sup: Support, d: int) -> jnp.ndarray:
+    """(k,) -> (d,) server-side unprojection A^T y — ``randk.unproject``
+    honoring the live-slot mask; the default :class:`Compressor.decode`."""
+    vals = y if sup.active is None else y * sup.active
+    return randk.unproject(vals, sup.idx, d)
+
+
+def sparsify(u: jnp.ndarray, sup: Support, d: int) -> jnp.ndarray:
+    """A^T A u: what the client actually put on the air, dense — the one
+    definition the error-feedback residual and the aggregation paths
+    share (ISSUE 7 satellite: ``fl/rounds.py`` no longer re-implements
+    the projection)."""
+    return decode_support(project(u, sup), sup, d)
+
+
+def dense_mask(sup: Support, d: int) -> jnp.ndarray:
+    """(d,) 0/1 indicator of the live support (the fused kernel's mask
+    column)."""
+    ones = (jnp.ones(sup.idx.shape, jnp.float32) if sup.active is None
+            else sup.active)
+    return jnp.zeros((d,), jnp.float32).at[sup.idx].set(ones)
+
+
+@dataclass(frozen=True)
+class Compressor:
+    """One update-compression scheme.
+
+    Hooks (all trace-safe except ``sensitivity``/``carry``/
+    ``dynamic_support``, which are config-static):
+      select_support(cfg, d, k, prev_delta, key) -> Support
+          the transmitted coordinate set; ``prev_delta`` is the previous
+          round's reconstructed aggregate (zeros/None on cold start) for
+          server-guided schemes; ``key`` is the round's support lane.
+      sensitivity(cfg, d) -> float
+          STATIC multiplier on the per-client norm bound ψ = η τ C1,
+          consumed by BOTH the Theorem-5 β design (power + privacy caps)
+          and the ledger's Theorem-3 ε spend (C2 is linear in C1).
+          ``d`` may be None for host callers of dimension-independent
+          schemes.
+      encode(cfg, updates (rc, d), keys (rc, 2)) -> (rc, d)
+          optional per-client value transform applied after the transmit
+          clip and before projection (stochastic quantization); ``keys``
+          are per-client fold_in-derived quant keys. None = identity.
+      decode(cfg, y (k,), sup, d) -> (d,)
+          server-side unprojection; None = :func:`decode_support`.
+      carry(cfg) -> bool
+          True when the scheme REQUIRES error-feedback residuals in the
+          client bank regardless of ``cfg.error_feedback`` (top-k without
+          EF starves never-transmitted coordinates forever).
+      dynamic_support(cfg) -> bool
+          True when ``select_support`` may return a non-None ``active``
+          (config-static, so fixed-support schemes trace the exact seed
+          code path).
+    """
+    name: str
+    select_support: Callable
+    sensitivity: Callable = lambda cfg, d: 1.0
+    encode: Optional[Callable] = None
+    decode: Optional[Callable] = None
+    carry: Callable = lambda cfg: False
+    dynamic_support: Callable = lambda cfg: False
+
+
+_REGISTRY: Dict[str, Compressor] = {}
+
+
+def register_compressor(name: str, comp: Compressor, *,
+                        overwrite: bool = False) -> Compressor:
+    """Add a scheme under ``PFELSConfig.compressor == name``."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"compressor {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    if comp.select_support is None:
+        raise ValueError(f"compressor {name!r} needs a select_support hook")
+    _REGISTRY[name] = comp
+    return comp
+
+
+def unregister_compressor(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_compressor(name: str) -> Compressor:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown compressor {name!r}; registered: "
+            f"{sorted(_REGISTRY)} (add new schemes via "
+            f"repro.core.compressors.register_compressor)") from None
+
+
+def list_compressors():
+    return sorted(_REGISTRY)
+
+
+# ------------------------------------------------------------ shared views
+
+def sensitivity_factor(cfg, d: Optional[int] = None) -> float:
+    """The configured compressor's static sensitivity multiplier — the
+    one value the β design and the ε ledger must agree on (DESIGN.md
+    §13). Config-driven, so host recomputations (``PrivacyLedger``)
+    reproduce the in-graph spend exactly."""
+    return float(get_compressor(cfg.compressor).sensitivity(cfg, d))
+
+
+def carry_required(cfg) -> bool:
+    """Whether the configured compressor forces error-feedback residuals
+    on (``top_k_ef``), independent of ``cfg.error_feedback``."""
+    return bool(get_compressor(cfg.compressor).carry(cfg))

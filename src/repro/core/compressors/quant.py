@@ -1,0 +1,66 @@
+"""``stoch_quant`` — QSGD-style stochastic quantization over rand-k.
+
+Support selection is the paper's uniform rand-k draw; on top, each
+client's (already transmit-clipped) update is quantized to
+``s = 2^(quant_bits-1) - 1`` signed magnitude levels with UNBIASED
+stochastic rounding: with ``y = |u_j|/||u|| · s``, the level is
+``floor(y) + Bernoulli(y - floor(y))``, rescaled by ``||u||/s``. The
+per-client rounding keys are ``fold_in(ks[3], QUANT_STREAM_TAG)`` split
+per cohort slot — derived from the support lane per the DESIGN.md §5
+7-lane contract (the dropout-channel precedent).
+
+Sensitivity: stochastic rounding perturbs each coordinate by at most one
+level (``||u||/s``), so ``||q(u)|| ≤ ||u|| + sqrt(d)·||u||/s =
+(1 + sqrt(d)/s)·||u||`` — the DETERMINISTIC worst-case norm inflation.
+The factor multiplies the Lemma-2 bound ψ = η τ C1, tightening BOTH the
+Theorem-5 power cap (the transmitted signal really can be that much
+larger, so β shrinks to keep ``E||x_i||² ≤ P_i``) and the Theorem-3 ε
+spend (a larger released norm costs more budget) — threading one static
+float through both is what keeps the energy and privacy accounting
+consistent (DESIGN.md §13).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors.base import Compressor, register_compressor
+from repro.core.compressors.rand_k import select_support as _randk_support
+
+
+def _levels(cfg) -> int:
+    s = 2 ** (int(cfg.quant_bits) - 1) - 1
+    if s < 1:
+        raise ValueError(
+            f"quant_bits={cfg.quant_bits} leaves no magnitude levels "
+            f"(need quant_bits >= 2)")
+    return s
+
+
+def encode(cfg, updates: jnp.ndarray, keys: jnp.ndarray) -> jnp.ndarray:
+    """(rc, d) unbiased stochastic quantization, one key per client."""
+    s = float(_levels(cfg))
+
+    def one(u, k):
+        u = u.astype(jnp.float32)
+        norm = jnp.linalg.norm(u)
+        scale = jnp.where(norm > 0, norm, 1.0)
+        y = jnp.abs(u) / scale * s
+        lo = jnp.floor(y)
+        level = lo + (jax.random.uniform(k, u.shape) < (y - lo))
+        return jnp.sign(u) * level * (scale / s)
+
+    return jax.vmap(one)(updates, keys)
+
+
+def sensitivity(cfg, d) -> float:
+    if d is None:
+        raise ValueError(
+            "stoch_quant sensitivity is dimension-dependent "
+            "(1 + sqrt(d)/levels); pass the flat model dimension d")
+    return 1.0 + (float(d) ** 0.5) / float(_levels(cfg))
+
+
+register_compressor("stoch_quant", Compressor(
+    name="stoch_quant", select_support=_randk_support,
+    sensitivity=sensitivity, encode=encode))

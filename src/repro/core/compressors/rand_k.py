@@ -1,0 +1,46 @@
+"""``rand_k`` — the paper's uniform random-k sparsifier (seed-exact).
+
+Alg. 2 line 12: ω_t is a uniform k-subset of [d], shared across clients
+(AirComp alignment). ``randk_mode="server_topk"`` (beyond paper) is a
+rand-k *mode*, not a separate compressor: half the budget goes to the top
+coords of ``|Δ̂_{t-1}|``, half explored uniformly — pure top-k would lock
+its support (coords never transmitted keep ``|Δ̂|=0`` and are never
+selected), and a cold start (zero/absent ``prev_delta``) falls back to
+the uniform sample — top_k over ``|zeros|`` would deterministically pick
+coords ``0..k1-1``, biasing round 1.
+
+Sensitivity factor 1.0: the projection is a submatrix of the identity, so
+``||A u|| ≤ ||u||`` and the Lemma-2 bound ψ = η τ C1 is unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import randk
+from repro.core.compressors.base import (Compressor, Support,
+                                         register_compressor)
+
+
+def select_support(cfg, d: int, k: int, prev_delta, key) -> Support:
+    """The exact pre-registry ``algorithms._pfels_support`` draw — moved
+    here verbatim so the rand-k goldens stay bit-identical (ISSUE 7)."""
+    if cfg.randk_mode == "server_topk" and prev_delta is not None:
+        def _warm_idx():
+            k1 = k // 2
+            _, idx_top = jax.lax.top_k(jnp.abs(prev_delta), k1)
+            scores = jax.random.uniform(key, (d,))
+            scores = scores.at[idx_top].set(-jnp.inf)
+            _, idx_rand = jax.lax.top_k(scores, k - k1)
+            return jnp.concatenate([idx_top, idx_rand])
+
+        idx = jax.lax.cond(
+            jnp.linalg.norm(prev_delta) > 0, _warm_idx,
+            lambda: randk.sample_indices(key, d, k))
+    else:
+        idx = randk.sample_indices(key, d, k)
+    return Support(idx)
+
+
+register_compressor("rand_k", Compressor(
+    name="rand_k", select_support=select_support))

@@ -1,0 +1,78 @@
+"""DP-aware adaptive compression schedules (DESIGN.md §13).
+
+``configs.base.CompressionSchedule`` declares the policy; these helpers
+evaluate it TRACE-SAFELY from the round counter ``t`` (an i32 scalar
+carried through the compiled scan) and the ledger's running ε spend —
+so ``Trainer.run`` stays one ``lax.scan`` program with zero host
+round-trips, and the streamed host loop passes the same traced scalars
+to its jitted step (the two backends stay bit-identical).
+
+Three annealed knobs, all config-static when inactive (``None`` return =
+the seed-exact untouched code path):
+
+  - ``k_active``: the live fraction of the k budget anneals linearly
+    from 1 to ``k_end_ratio`` over ``cfg.rounds`` — expressed as a 0/1
+    column over the static-width support (DESIGN.md §13 Support
+    contract), never a shape change.
+  - ``power_scale``: a multiplier on the per-device power limits P_i,
+    annealing 1 → ``power_end`` (the Theorem-5 power cap scales by its
+    sqrt).
+  - ``epsilon_round`` (mode="budget"): the per-round ε ceiling handed to
+    the Theorem-5 privacy cap becomes
+    ``clip((ε_total − ε_spent) / rounds_left, eps_floor, cfg.epsilon)``
+    with ``ε_total = cfg.epsilon · cfg.rounds`` — rounds that underspend
+    (power-cap-bound β) return their slack to later rounds. The ceiling
+    never exceeds ``cfg.epsilon``, so the ledger's per-round cap (and
+    the Theorem-3 guarantee it reports) is untouched.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import CompressionSchedule
+
+
+def _progress(t, rounds: int):
+    """Anneal position in [0, 1]: 0 at round 0, 1 at the final round;
+    clipped so chunked resume past ``cfg.rounds`` stays at the endpoint."""
+    span = float(max(rounds - 1, 1))
+    return jnp.clip(jnp.asarray(t, jnp.float32) / span, 0.0, 1.0)
+
+
+def k_active(sched: CompressionSchedule, cfg, k_budget: int,
+             t) -> Optional[jnp.ndarray]:
+    """(k_budget,) 0/1 live-slot column for round ``t``, or None when the
+    schedule leaves k alone (static — the seed-exact fast path)."""
+    if sched.mode == "none" or sched.k_end_ratio >= 1.0:
+        return None
+    frac = 1.0 + (sched.k_end_ratio - 1.0) * _progress(t, cfg.rounds)
+    k_t = jnp.maximum(jnp.floor(frac * k_budget), 1.0)
+    return (jnp.arange(k_budget) < k_t).astype(jnp.float32)
+
+
+def power_scale(sched: CompressionSchedule, cfg, t):
+    """Traced P_i multiplier for round ``t``, or None when the schedule
+    leaves power alone (static)."""
+    if sched.mode == "none" or sched.power_end == 1.0:
+        return None
+    return 1.0 + (sched.power_end - 1.0) * _progress(t, cfg.rounds)
+
+
+def epsilon_round(sched: CompressionSchedule, cfg, t, eps_spent):
+    """Traced per-round ε ceiling for the Theorem-5 privacy cap, or None
+    for the static ``cfg.epsilon`` (modes other than "budget")."""
+    if sched.mode != "budget":
+        return None
+    total = float(cfg.epsilon) * float(cfg.rounds)
+    left = jnp.maximum(jnp.asarray(cfg.rounds, jnp.float32)
+                       - jnp.asarray(t, jnp.float32), 1.0)
+    remaining = jnp.maximum(total - jnp.asarray(eps_spent, jnp.float32),
+                            0.0)
+    return jnp.clip(remaining / left, sched.eps_floor, cfg.epsilon)
+
+
+def is_active(sched: CompressionSchedule) -> bool:
+    """Whether the schedule changes anything at all (config-static)."""
+    return sched.mode != "none"

@@ -1,0 +1,49 @@
+"""``threshold`` — hard-threshold sparsification, static-width padded.
+
+A coordinate is eligible when ``|Δ̂_{t-1}| ≥ threshold_frac · max|Δ̂_{t-1}|``
+(server-guided, like top_k_ef, so the support aligns across clients).
+Under jit the transmitted set must have a static width, so the entry
+fills the k budget with the top-scoring coords and DEACTIVATES the slots
+below threshold via the :class:`Support.active` column — the effective
+support size ``k_used = Σ active`` is traced and flows into the Theorem-5
+β design (a smaller live set relaxes the per-device power cap by
+``sqrt(k_budget/k_used)``), the receiver, and the ``subcarriers`` metric.
+
+The argmax coordinate always satisfies its own threshold
+(``threshold_frac ≤ 1``), so at least one slot is live on warm rounds;
+the cold start (zero ``prev_delta``) falls back to a fully-active uniform
+rand-k draw. Sensitivity factor 1.0: masked projection only shrinks
+norms, and the support comes from a released aggregate (post-processing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import randk
+from repro.core.compressors.base import (Compressor, Support,
+                                         register_compressor)
+
+
+def select_support(cfg, d: int, k: int, prev_delta, key) -> Support:
+    if prev_delta is None:
+        return Support(randk.sample_indices(key, d, k),
+                       jnp.ones((k,), jnp.float32))
+
+    def _warm():
+        mag = jnp.abs(prev_delta)
+        _, idx = jax.lax.top_k(mag, k)
+        thresh = cfg.threshold_frac * jnp.max(mag)
+        return idx, (mag[idx] >= thresh).astype(jnp.float32)
+
+    def _cold():
+        return randk.sample_indices(key, d, k), jnp.ones((k,), jnp.float32)
+
+    idx, active = jax.lax.cond(jnp.linalg.norm(prev_delta) > 0,
+                               _warm, _cold)
+    return Support(idx, active)
+
+
+register_compressor("threshold", Compressor(
+    name="threshold", select_support=select_support,
+    dynamic_support=lambda cfg: True))

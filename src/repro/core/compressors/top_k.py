@@ -1,0 +1,40 @@
+"""``top_k_ef`` — magnitude top-k with mandatory error feedback.
+
+ω_t = the k largest-magnitude coords of the PREVIOUS round's released
+aggregate ``Δ̂_{t-1}`` — per-client top-k supports would not align on
+shared subcarriers, so the server-guided variant is the one AirComp
+admits. Selecting from a DP-released output is post-processing, so the
+sensitivity factor stays 1.0 (the arxiv 2304.04164 top-k-under-DP
+analysis; docs/paper_map.md).
+
+``carry(cfg) -> True``: pure top-k locks its support — a coordinate never
+transmitted keeps ``|Δ̂| = 0`` and is never selected again — so this
+entry REQUIRES error-feedback residuals (the round body and the Trainer's
+ClientBank turn them on even with ``cfg.error_feedback=False``): the
+untransmitted mass accumulates client-side and eventually dominates the
+released magnitudes. Cold start (zero ``prev_delta``) falls back to the
+uniform rand-k draw from the same support-lane key.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import randk
+from repro.core.compressors.base import (Compressor, Support,
+                                         register_compressor)
+
+
+def select_support(cfg, d: int, k: int, prev_delta, key) -> Support:
+    if prev_delta is None:
+        return Support(randk.sample_indices(key, d, k))
+    idx = jax.lax.cond(
+        jnp.linalg.norm(prev_delta) > 0,
+        lambda: jax.lax.top_k(jnp.abs(prev_delta), k)[1],
+        lambda: randk.sample_indices(key, d, k))
+    return Support(idx)
+
+
+register_compressor("top_k_ef", Compressor(
+    name="top_k_ef", select_support=select_support,
+    carry=lambda cfg: True))

@@ -18,11 +18,16 @@ import jax.numpy as jnp
 from repro.core import privacy
 
 
-def beta_power_cap(gains, power_limits, d: int, k: int, c1: float,
+def beta_power_cap(gains, power_limits, d: int, k, c1: float,
                    eta: float, tau: int):
-    """Eq. (34c): min_i |h_i| sqrt(d P_i) / (C1 eta tau sqrt(k))."""
+    """Eq. (34c): min_i |h_i| sqrt(d P_i) / (C1 eta tau sqrt(k)).
+
+    ``k`` may be a traced live-support count (a threshold compressor or
+    an annealed-k schedule, DESIGN.md §13) — bit-identical to the old
+    ``float(k)`` path for static ints."""
+    sqrt_k = jnp.sqrt(jnp.asarray(k, jnp.float32))
     per = gains * jnp.sqrt(float(d) * power_limits) / (c1 * eta * tau
-                                                       * jnp.sqrt(float(k)))
+                                                       * sqrt_k)
     return jnp.min(per)
 
 

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PFELSConfig
-from repro.core import aggregation, channels, power_control, privacy, randk
+from repro.core import (aggregation, channels, compressors, power_control,
+                        privacy)
 
 
 @dataclass(frozen=True)
@@ -38,19 +39,31 @@ class Algorithm:
     server-side aggregation; the entry must provide ``server_aggregate``.
 
     Hooks (all trace-safe):
-      select_support(cfg, d, k, prev_delta, key) -> (idx (k_used,), k_used)
-          the transmitted coordinate set omega_t; ``prev_delta`` is the
-          previous round's reconstructed update (zeros on cold start) for
-          server-guided schemes.
-      design_beta(cfg, gains, power_limits, d, k_used) -> scalar beta
+      select_support(cfg, d, k, prev_delta, key)
+          -> repro.core.compressors.Support
+          the transmitted coordinate set omega_t (static-width ``idx``
+          plus an optional 0/1 ``active`` live-slot column, DESIGN.md
+          §13); ``prev_delta`` is the previous round's reconstructed
+          update (zeros on cold start) for server-guided schemes.
+          Sparsifying schemes (pfels) delegate to the configured
+          ``repro.core.compressors`` registry entry.
+      design_beta(cfg, gains, power_limits, d, k_used, *, epsilon=None,
+                  c1_scale=1.0) -> scalar beta
           the per-round alignment coefficient from the GLOBAL (r,) gains
-          and the selected clients' power limits.
+          and the selected clients' power limits. ``k_used`` may be a
+          traced live-support count; ``epsilon`` overrides the per-round
+          budget (the "budget" CompressionSchedule); ``c1_scale`` is the
+          compressor's static sensitivity multiplier on C1 (DESIGN.md
+          §13) — both caps are linear in C1, so it tightens the power
+          AND privacy constraints consistently.
       server_aggregate(cfg, flat_updates, noise_key, *, d, r) -> (d,)
           digital aggregation of the (r, d) update batch.
-      privacy_spend(cfg, beta) -> scalar eps
+      privacy_spend(cfg, beta, d=None) -> scalar eps
           per-round (eps, cfg.resolved_delta())-DP charge for the realized
-          beta, accumulated by the in-graph ledger. None = the scheme
-          carries no per-round DP guarantee and is never ledgered.
+          beta, accumulated by the in-graph ledger; ``d`` feeds
+          dimension-dependent compressor sensitivity (stoch_quant).
+          None = the scheme carries no per-round DP guarantee and is
+          never ledgered.
 
     ``sparsifies_transmit`` tells the error-feedback memory whether the
     transmitted signal was restricted to the support (residual = the
@@ -104,73 +117,81 @@ def list_algorithms():
 
 # ------------------------------------------------------- built-in schemes
 
-def _dp_epsilon_spend(cfg: PFELSConfig, beta):
+def _dp_epsilon_spend(cfg: PFELSConfig, beta, d=None, *,
+                      compressed: bool = True):
     """Per-round eps actually consumed (Thm 3 inverse) for the realized
     beta, capped at the configured budget — Theorem 5 already enforces
     ``C2 * beta <= eps``, so the cap only absorbs fp rounding (and matches
     the host-side ledger convention of the legacy drivers). C2 is built
     from the channel model's POST-COMBINING noise std (DESIGN.md §11):
     a multi-antenna receiver changes the intrinsic noise the guarantee
-    rides on, and the ledger must charge against that operating point."""
+    rides on, and the ledger must charge against that operating point —
+    and, for compressed (sparsifying) schemes, from ``C1`` scaled by the
+    compressor's static sensitivity factor (DESIGN.md §13): C2 is linear
+    in C1, so a norm-inflating transform (stoch_quant) costs
+    proportionally more budget per unit beta. ``d`` feeds
+    dimension-dependent factors; rand_k's factor is 1.0, making this
+    bit-identical to the pre-registry spend."""
+    s = compressors.sensitivity_factor(cfg, d) if compressed else 1.0
     c2 = privacy.c2_coefficient(
-        cfg.local_lr, cfg.local_steps, cfg.clip, cfg.clients_per_round,
+        cfg.local_lr, cfg.local_steps, cfg.clip * s, cfg.clients_per_round,
         cfg.num_clients, cfg.resolved_delta(),
         channels.effective_noise_std(cfg.channel))
     return jnp.minimum(jnp.float32(c2) * beta, jnp.float32(cfg.epsilon))
 
 
-def _pfels_support(cfg: PFELSConfig, d: int, k: int, prev_delta, key):
-    """rand-k support omega_t; with ``randk_mode="server_topk"`` (beyond
-    paper) half the budget goes to the top coords of |Delta_hat_{t-1}|
-    (shared across clients -> AirComp alignment preserved), half explored
-    uniformly — pure top-k locks its support (coords never transmitted keep
-    |Delta_hat|=0 and are never selected). A zero/absent prev_delta (cold
-    start) falls back to the uniform sample — top_k over |zeros| would
-    deterministically pick coords 0..k1-1, biasing round 1."""
-    if cfg.randk_mode == "server_topk" and prev_delta is not None:
-        def _warm_idx():
-            k1 = k // 2
-            _, idx_top = jax.lax.top_k(jnp.abs(prev_delta), k1)
-            scores = jax.random.uniform(key, (d,))
-            scores = scores.at[idx_top].set(-jnp.inf)
-            _, idx_rand = jax.lax.top_k(scores, k - k1)
-            return jnp.concatenate([idx_top, idx_rand])
+def _dp_epsilon_spend_dense(cfg: PFELSConfig, beta, d=None):
+    """The spend for full-update (non-sparsifying) DP schemes (wfl_pdp):
+    no compressor in the transmit path, so no sensitivity factor."""
+    return _dp_epsilon_spend(cfg, beta, d, compressed=False)
 
-        idx = jax.lax.cond(
-            jnp.linalg.norm(prev_delta) > 0, _warm_idx,
-            lambda: randk.sample_indices(key, d, k))
-    else:
-        idx = randk.sample_indices(key, d, k)
-    return idx, k
+
+def _pfels_support(cfg: PFELSConfig, d: int, k: int, prev_delta, key):
+    """Sparsifying support omega_t — delegated to the configured
+    ``repro.core.compressors`` registry entry (DESIGN.md §13). The
+    paper's rand-k draw (incl. ``randk_mode="server_topk"``) lives in
+    the ``rand_k`` entry, bit-exact with the pre-registry code."""
+    comp = compressors.get_compressor(cfg.compressor)
+    return comp.select_support(cfg, d, k, prev_delta, key)
 
 
 def _full_support(cfg: PFELSConfig, d: int, k: int, prev_delta, key):
     """Full-update baselines transmit every coordinate (k = d)."""
-    return jnp.arange(d), d
+    return compressors.Support(jnp.arange(d))
 
 
-def _pfels_beta(cfg: PFELSConfig, gains, power_limits, d: int, k: int):
+def _pfels_beta(cfg: PFELSConfig, gains, power_limits, d: int, k, *,
+                epsilon=None, c1_scale: float = 1.0):
     """``gains`` are the channel model's EFFECTIVE observed gains (the
     design view of DESIGN.md §11); the privacy cap inside Theorem 5 uses
-    the post-combining noise std for the same reason as the ledger."""
+    the post-combining noise std for the same reason as the ledger.
+    ``epsilon`` may be the schedule's traced per-round ceiling and ``k``
+    a traced live-support count; ``c1_scale`` is the compressor's
+    sensitivity factor — C1·s in the power cap keeps E||x_i||^2 <= P_i
+    when the encoded signal's norm inflates, and in the privacy cap
+    keeps beta <= eps/C2' consistent with the ledger's charge."""
+    eps = cfg.epsilon if epsilon is None else epsilon
     return power_control.beta_pfels(
-        gains, power_limits, d=d, k=k, c1=cfg.clip, eta=cfg.local_lr,
-        tau=cfg.local_steps, epsilon=cfg.epsilon,
+        gains, power_limits, d=d, k=k, c1=cfg.clip * c1_scale,
+        eta=cfg.local_lr, tau=cfg.local_steps, epsilon=eps,
         r=cfg.clients_per_round, n=cfg.num_clients,
         delta=cfg.resolved_delta(),
         sigma0=channels.effective_noise_std(cfg.channel))
 
 
-def _wfl_p_beta(cfg: PFELSConfig, gains, power_limits, d: int, k: int):
+def _wfl_p_beta(cfg: PFELSConfig, gains, power_limits, d: int, k, *,
+                epsilon=None, c1_scale: float = 1.0):
     return power_control.beta_wfl_p(
         gains, power_limits, c1=cfg.clip, eta=cfg.local_lr,
         tau=cfg.local_steps)
 
 
-def _wfl_pdp_beta(cfg: PFELSConfig, gains, power_limits, d: int, k: int):
+def _wfl_pdp_beta(cfg: PFELSConfig, gains, power_limits, d: int, k, *,
+                  epsilon=None, c1_scale: float = 1.0):
+    eps = cfg.epsilon if epsilon is None else epsilon
     return power_control.beta_wfl_pdp(
         gains, power_limits, c1=cfg.clip, eta=cfg.local_lr,
-        tau=cfg.local_steps, epsilon=cfg.epsilon,
+        tau=cfg.local_steps, epsilon=eps,
         r=cfg.clients_per_round, n=cfg.num_clients,
         delta=cfg.resolved_delta(),
         sigma0=channels.effective_noise_std(cfg.channel))
@@ -198,7 +219,7 @@ register_algorithm("wfl_p", Algorithm(
 
 register_algorithm("wfl_pdp", Algorithm(
     name="wfl_pdp", aircomp=True, select_support=_full_support,
-    design_beta=_wfl_pdp_beta, privacy_spend=_dp_epsilon_spend))
+    design_beta=_wfl_pdp_beta, privacy_spend=_dp_epsilon_spend_dense))
 
 register_algorithm("dp_fedavg", Algorithm(
     name="dp_fedavg", aircomp=False, server_aggregate=_dp_fedavg_aggregate))

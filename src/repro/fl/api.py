@@ -51,7 +51,7 @@ from jax.sharding import Mesh
 import numpy as np
 
 from repro.configs.base import PFELSConfig
-from repro.core import channels, privacy
+from repro.core import channels, compressors, privacy
 from repro.data import loader
 from repro.fl import algorithms, rounds
 from repro.fl import bank as bank_lib
@@ -135,8 +135,14 @@ class Trainer:
         self.unravel = unravel
         self._params_template = params_template
         self.mesh = rounds._resolve_cohort_mesh(cfg, mesh)
+        # carry-compressors (top_k_ef) force the bank's error-feedback
+        # residual memory on even with cfg.error_feedback=False
+        # (DESIGN.md §13) — mirrors the round body's ``ef_on`` static
+        ef_on = cfg.error_feedback or (
+            self.algorithm.aircomp and self.algorithm.sparsifies_transmit
+            and compressors.carry_required(cfg))
         self.bank = bank_lib.make_bank(cfg.bank_backend, cfg.num_clients,
-                                       self.d, cfg.error_feedback)
+                                       self.d, ef_on)
         if self.bank.backend == "streamed" and self.mesh is not None:
             raise ValueError(
                 "bank_backend='streamed' is host-driven and does not "
@@ -191,7 +197,8 @@ class Trainer:
             eps_round = jnp.zeros((), jnp.float32)
         else:
             eps_round = jnp.asarray(
-                self.algorithm.privacy_spend(self.cfg, metrics["beta"]),
+                self.algorithm.privacy_spend(self.cfg, metrics["beta"],
+                                             self.d),
                 jnp.float32)
             ledger = privacy.ledger_spend(ledger, eps_round)
         return ledger, dict(metrics, eps_round=eps_round)
@@ -199,11 +206,14 @@ class Trainer:
     # ------------------------------------------------------------- loops
 
     def _bank_round(self, params, power_limits, bank, prev_delta, chan,
-                    data_x, data_y, round_key):
+                    data_x, data_y, round_key, t=None, eps_spent=None):
         """One round against the in-graph (resident) bank: sample the
         cohort, gather its slices, run the cohort core (which also evolves
         the channel-model carry, DESIGN.md §11), scatter the residual
-        slice + this round's bank lanes back (DESIGN.md §10)."""
+        slice + this round's bank lanes back (DESIGN.md §10). ``t`` (the
+        absolute round counter) and ``eps_spent`` (the ledger's running
+        sum) feed the CompressionSchedule inside the compiled body
+        (DESIGN.md §13) — traced scalars, never a host round-trip."""
         ks = rounds.split_round_key(round_key)
         sel = rounds.sample_cohort(ks[0], self.cfg.num_clients,
                                    self.cfg.clients_per_round)
@@ -211,7 +221,7 @@ class Trainer:
         new_params, metrics, new_res_sel, delta_hat, new_chan = \
             self._cohort_core(
                 params, power_limits[sel], data_x[sel], data_y[sel], ks,
-                res_sel, prev_delta, chan, sel)
+                res_sel, prev_delta, chan, sel, t, eps_spent)
         lanes = bank_lib.cohort_lane_keys(
             ks[rounds.ROUND_KEY_LANES["bank"]], sel)
         new_bank = self.bank.scatter(bank, sel, new_res_sel, lanes)
@@ -221,7 +231,8 @@ class Trainer:
         new_params, metrics, new_bank, delta_hat, new_chan = \
             self._bank_round(
                 state.params, state.power_limits, state.bank,
-                state.prev_delta, state.chan, data_x, data_y, state.key)
+                state.prev_delta, state.chan, data_x, data_y, state.key,
+                state.round, state.ledger.eps_sum)
         ledger, metrics = self._spend(state.ledger, metrics)
         return self._advance(state, 1, new_params, new_bank, delta_hat,
                              ledger, new_chan), metrics
@@ -252,18 +263,22 @@ class Trainer:
         return fn(state, data_x, data_y)
 
     def _run_impl(self, state: TrainState, data_x, data_y, t_rounds: int):
-        def body(carry, round_key):
+        def body(carry, xs):
+            round_key, t = xs
             p, bank, prev, ledger, chan = carry
             p2, metrics, bank2, delta_hat, chan2 = self._bank_round(
                 p, state.power_limits, bank, prev, chan, data_x, data_y,
-                round_key)
+                round_key, t, ledger.eps_sum)
             ledger, metrics = self._spend(ledger, metrics)
             return (p2, bank2, delta_hat, ledger, chan2), metrics
 
         keys = jax.random.split(state.key, t_rounds)
+        # absolute round counters, so chunked resume anneals the
+        # CompressionSchedule from where the last chunk stopped
+        ts = state.round + jnp.arange(t_rounds, dtype=jnp.int32)
         (p_f, bank_f, delta_f, ledger_f, chan_f), metrics = jax.lax.scan(
             body, (state.params, state.bank, state.prev_delta,
-                   state.ledger, state.chan), keys)
+                   state.ledger, state.chan), (keys, ts))
         return self._advance(state, t_rounds, p_f, bank_f, delta_f,
                              ledger_f, chan_f), metrics
 
@@ -277,11 +292,16 @@ class Trainer:
         ``cx``/``cy`` are not donated: no output shares their shape, so
         donation could never be honored."""
         if self._cohort_step_jit is None:
+            # ``t`` rides at the END so res_sel keeps position 6 for the
+            # donate_argnums contract; the schedule's eps_spent comes from
+            # the ledger argument INSIDE the jitted step (same traced
+            # value the resident scan reads from its carry)
             def step_fn(params, p_sel, cx, cy, ks, sel, res_sel,
-                        prev_delta, ledger, chan):
+                        prev_delta, ledger, chan, t):
                 new_params, metrics, new_res_sel, delta_hat, new_chan = \
                     self._cohort_core(params, p_sel, cx, cy, ks, res_sel,
-                                      prev_delta, chan, sel)
+                                      prev_delta, chan, sel, t,
+                                      ledger.eps_sum)
                 ledger, metrics = self._spend(ledger, metrics)
                 lanes = bank_lib.cohort_lane_keys(
                     ks[rounds.ROUND_KEY_LANES["bank"]], sel)
@@ -329,7 +349,8 @@ class Trainer:
                 chan = step_fn(
                     params, jnp.asarray(state.power_limits)[sel],
                     cx, cy, ks_all[ti], jnp.asarray(sel), res_sel,
-                    prev_delta, ledger, chan)
+                    prev_delta, ledger, chan,
+                    state.round + jnp.asarray(ti, jnp.int32))
             bank = self.bank.scatter(bank, sel, new_res_sel, lanes)
             per_round.append(metrics)
         stacked = {k: np.stack([np.asarray(m[k]) for m in per_round])

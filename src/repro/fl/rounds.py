@@ -35,7 +35,7 @@ from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import PFELSConfig
-from repro.core import aggregation, channel, channels, privacy, randk
+from repro.core import aggregation, channel, channels, compressors, privacy
 from repro.fl import algorithms
 from repro.fl.client import local_train, model_update
 from repro.kernels.pfels_transmit import ref as transmit_ref
@@ -165,6 +165,35 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
     aircomp = alg.aircomp
     n_shards = _cohort_shards(cfg, mesh)
 
+    # ---- compressor statics (DESIGN.md §13): the registry entry only
+    # applies to sparsifying AirComp schemes (pfels); wfl_* transmit dense
+    # and dp_fedavg/fedavg are digital. Everything here is config-static,
+    # so the rand_k default traces the exact pre-registry code paths.
+    comp = (compressors.get_compressor(cfg.compressor)
+            if aircomp and alg.sparsifies_transmit else None)
+    sched = cfg.schedule
+    sched_on = comp is not None and compressors.schedules.is_active(sched)
+    has_encode = comp is not None and comp.encode is not None
+    # carry-compressors (top_k_ef) force error feedback on: without the
+    # residual memory, pure top-k starves never-transmitted coordinates
+    ef_on = cfg.error_feedback or (comp is not None and comp.carry(cfg))
+    c1_scale = comp.sensitivity(cfg, d) if comp is not None else 1.0
+    # whether Support.active can be non-None this config (static, so the
+    # sharded body's fixed signature knows to consume its ``act`` slot)
+    dyn_active = comp is not None and (
+        comp.dynamic_support(cfg)
+        or (sched_on and sched.k_end_ratio < 1.0))
+    # encode must see the CLIPPED update (clip -> quantize -> transmit is
+    # the Lemma-2 premise the sensitivity factor is derived under), and
+    # error feedback needs the clip scales for the residual — both cases
+    # pre-apply the transmit clip and hand the aggregator clip=None
+    pre_clip = cfg.transmit_clip is not None and (ef_on or has_encode)
+    if comp is not None and comp.decode is not None and n_shards > 1:
+        raise ValueError(
+            f"compressor {comp.name!r} has a custom decode hook, which "
+            f"the sharded-cohort path does not route yet; use "
+            f"client_sharding='none' (DESIGN.md §13)")
+
     train = functools.partial(
         local_train, loss_fn=loss_fn, steps=cfg.local_steps,
         lr=cfg.local_lr, clip=cfg.clip, momentum=cfg.momentum)
@@ -178,7 +207,8 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         flat = jax.vmap(lambda u: ravel_pytree(u)[0])(updates)
         return flat, losses
 
-    def support_and_beta(gains_design, p_sel, prev_delta, idx_key):
+    def support_and_beta(gains_design, p_sel, prev_delta, idx_key,
+                         t=None, eps_spent=None):
         """Registry hooks: support omega_t + β-design, from the GLOBAL (r,)
         gains — shared by both execution paths. ``gains_design`` must be
         ``channels.design_gains(cr)``: the gains the devices actually
@@ -190,38 +220,60 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         ``h_i < h_i^est``, regression-tested in
         tests/test_power_control.py), with dropped-out clients lifted so
         they never bind the min (they transmit nothing — the realized-r
-        side of the DESIGN.md §11 mask contract)."""
-        idx, k_used = alg.select_support(cfg, d, k_coords, prev_delta,
-                                         idx_key)
-        beta = alg.design_beta(cfg, gains_design, p_sel, d, k_used)
-        return idx, beta, k_used
+        side of the DESIGN.md §11 mask contract).
+
+        With an active :class:`CompressionSchedule` (DESIGN.md §13) the
+        round counter ``t`` and the ledger's running spend anneal the
+        live-slot column (ANDed into the support), the power limits, and
+        the per-round ε ceiling — all traced, zero host round-trips."""
+        sup = compressors.as_support(
+            alg.select_support(cfg, d, k_coords, prev_delta, idx_key))
+        eps_t = None
+        if sched_on:
+            ka = compressors.schedules.k_active(sched, cfg, k_coords, t)
+            if ka is not None:
+                sup = compressors.and_active(sup, ka)
+            ps = compressors.schedules.power_scale(sched, cfg, t)
+            if ps is not None:
+                p_sel = p_sel * ps
+            eps_t = compressors.schedules.epsilon_round(sched, cfg, t,
+                                                        eps_spent)
+        k_used = compressors.support_size(sup)
+        beta = alg.design_beta(cfg, gains_design, p_sel, d, k_used,
+                               epsilon=eps_t, c1_scale=c1_scale)
+        return sup, beta, k_used
 
     cohort_apply = None
     if n_shards > 1:
         spec_c = P(_COHORT_AXES)
 
         def cohort_body(params, cx_l, cy_l, ck_l, res_l, gains_l, gest_l,
-                        mask_l, idx, beta, noise_key):
+                        mask_l, qk_l, idx, act, beta, noise_key):
             # gains_l is this shard's (r_local, M) per-antenna slice (M=1
             # for scalar channels — bit-exact identity, DESIGN.md §12)
             # inside the manual region: sharding constraints must not
             # re-reference the cohort axes
             with rules.exclude_axes(*_COHORT_AXES):
                 flat_l, losses_l = client_updates(params, cx_l, cy_l, ck_l)
-            if cfg.error_feedback:
+            if ef_on:
                 flat_l = flat_l + res_l
-            scales_l = jnp.ones((flat_l.shape[0],), jnp.float32)
+            tx_l = flat_l
             if aircomp:
                 # same once-only clip-scale policy as the vmapped branch:
-                # error feedback needs the scales for the residual anyway,
-                # so compute them here, hand the aggregator pre-clipped
-                # updates (clip=None), and ship the scales back sharded
+                # error feedback / encode need the clipped updates anyway,
+                # so pre-apply the clip here, hand the aggregator clip=None,
+                # and ship the as-transmitted updates back sharded for the
+                # residual (compressors.sparsify of tx_l == what went on
+                # the air)
                 agg_updates, agg_clip = flat_l, cfg.transmit_clip
-                if cfg.transmit_clip is not None and cfg.error_feedback:
+                if pre_clip:
                     scales_l = transmit_ref.clip_scales(flat_l,
                                                         cfg.transmit_clip)
                     agg_updates = flat_l * scales_l[:, None]
                     agg_clip = None
+                if has_encode:
+                    agg_updates = comp.encode(cfg, agg_updates, qk_l)
+                tx_l = agg_updates
                 delta_hat, energy, _ = aggregation.aircomp_aggregate_sharded(
                     agg_updates, idx, gains_l, beta, noise_key, d=d,
                     sigma0=sigma0, r=r, axis_name=_COHORT_AXES,
@@ -230,23 +282,30 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                                      else None),
                     clip=agg_clip,
                     use_kernel=cfg.use_fused_kernel,
-                    tx_mask_local=(mask_l if has_mask else None))
+                    tx_mask_local=(mask_l if has_mask else None),
+                    active=(act if dyn_active else None))
             else:
                 # dp_fedavg / fedavg aggregate on the gathered updates
                 # outside the manual region; only training is sharded
                 delta_hat = jnp.zeros((d,), jnp.float32)
                 energy = jnp.asarray(0.0, jnp.float32)
-            return flat_l, losses_l, scales_l, delta_hat, energy
+            return flat_l, losses_l, tx_l, delta_hat, energy
 
         cohort_apply = shard_map_compat(
             cohort_body, mesh,
             in_specs=(P(), spec_c, spec_c, spec_c, spec_c, spec_c, spec_c,
-                      spec_c, P(), P(), P()),
+                      spec_c, spec_c, P(), P(), P(), P()),
             out_specs=(spec_c, spec_c, spec_c, P(), P()))
 
     def cohort_core(params, p_sel, cx, cy, ks, res_sel=None,
-                    prev_delta=None, chan_carry=None, sel=None):
+                    prev_delta=None, chan_carry=None, sel=None,
+                    t=None, eps_spent=None):
         ck = jax.random.split(ks[1], r)
+        # stochastic-rounding keys: fold_in-derived from the support lane
+        # (DESIGN.md §5 — the 7-lane round split stays pinned); unused
+        # (DCE'd) unless the compressor encodes
+        qk = jax.random.split(
+            jax.random.fold_in(ks[3], compressors.QUANT_STREAM_TAG), r)
 
         # ---- channel realization for this round (DESIGN.md §11): the
         # registered model consumes the gains/csi lanes and evolves its
@@ -267,41 +326,45 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         gains_obs = channels.observed_gains(cr)
         tx_mask = cr.tx_mask
 
-        idx = beta = None
+        sup = beta = None
         k_used = d
         if aircomp:
             # beta designed from what the devices observe (gains_obs ==
             # gains under perfect CSI) — the power cap must hold for the
             # precompensation the devices actually apply — with dropped
             # clients lifted out of the min (design_gains)
-            idx, beta, k_used = support_and_beta(
-                channels.design_gains(cr), p_sel, prev_delta, ks[3])
+            sup, beta, k_used = support_and_beta(
+                channels.design_gains(cr), p_sel, prev_delta, ks[3],
+                t, eps_spent)
 
         # ---- local training (lines 5-11) + error feedback [28-30]
-        # (beyond-paper option): add each selected client's residual memory
-        # to its update before sparsification; the untransmitted remainder
-        # is carried forward
-        use_ef = cfg.error_feedback and res_sel is not None
+        # (beyond-paper option, forced on by carry-compressors): add each
+        # selected client's residual memory to its update before
+        # sparsification; the untransmitted remainder is carried forward
+        use_ef = ef_on and res_sel is not None
         agg_sharded = None
-        transmit_scales = None
+        tx_full = None    # the as-transmitted (clipped/encoded) updates
         if cohort_apply is not None:
             res_l = (res_sel if use_ef
                      else jnp.zeros((r, d), jnp.float32))
             gains_mat = (cr.gains_ant if cr.gains_ant is not None
                          else gains[:, None])
-            flat_updates, losses, scales_sh, delta_sh, energy_sh = \
+            flat_updates, losses, tx_sh, delta_sh, energy_sh = \
                 cohort_apply(
                     params, cx, cy, ck, res_l, gains_mat, gains_obs,
                     (tx_mask if tx_mask is not None
                      else jnp.ones((r,), jnp.float32)),
-                    idx if idx is not None else jnp.arange(1),
+                    qk,
+                    sup.idx if sup is not None else jnp.arange(1),
+                    (sup.active if sup is not None
+                     and sup.active is not None
+                     else jnp.ones((1,), jnp.float32)),
                     beta if beta is not None else jnp.asarray(1.0,
                                                               jnp.float32),
                     ks[4])
             if aircomp:
                 agg_sharded = (delta_sh, energy_sh)
-                if cfg.transmit_clip is not None and cfg.error_feedback:
-                    transmit_scales = scales_sh
+                tx_full = tx_sh
         else:
             flat_updates, losses = client_updates(params, cx, cy, ck)
             if use_ef:
@@ -321,33 +384,46 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                 delta_hat, energy = agg_sharded
             else:
                 # error feedback needs the clip scales for the residual
-                # anyway, so compute them ONCE here and hand the aggregator
+                # anyway (and encode must see the clipped update), so
+                # compute them ONCE here and hand the aggregator
                 # pre-clipped updates (clip=None) instead of paying a second
                 # full (r, d) norm sweep inside the fused kernel's
                 # client_sumsq pass
                 agg_updates, agg_clip = flat_updates, cfg.transmit_clip
-                if cfg.transmit_clip is not None and cfg.error_feedback:
-                    transmit_scales = transmit_ref.clip_scales(
-                        flat_updates, cfg.transmit_clip)
-                    agg_updates = flat_updates * transmit_scales[:, None]
+                if pre_clip:
+                    agg_updates = flat_updates * transmit_ref.clip_scales(
+                        flat_updates, cfg.transmit_clip)[:, None]
                     agg_clip = None
+                if has_encode:
+                    agg_updates = comp.encode(cfg, agg_updates, qk)
+                tx_full = agg_updates
                 agg_kw = dict(
                     d=d, sigma0=sigma0, r=r,
                     unbiased_rescale=cfg.unbiased_rescale,
                     gains_est=(cr.gains_obs if cfg.channel.csi_error > 0
                                else None),
-                    clip=agg_clip, tx_mask=tx_mask)
+                    clip=agg_clip, tx_mask=tx_mask,
+                    active=sup.active)
                 if cfg.use_fused_kernel:
                     # the whole scenario matrix rides the kernel in-tile:
                     # tx_mask as a coefficient column, per-antenna gains
                     # through the MRC combine (DESIGN.md §12)
-                    delta_hat, energy, _ = \
+                    delta_hat, energy, y_agg = \
                         aggregation.aircomp_aggregate_fused(
-                            agg_updates, idx, gains, beta, ks[4],
+                            agg_updates, sup.idx, gains, beta, ks[4],
                             gains_ant=cr.gains_ant, **agg_kw)
                 else:
-                    delta_hat, energy, _ = aggregation.aircomp_aggregate(
-                        agg_updates, idx, gains, beta, ks[4], **agg_kw)
+                    delta_hat, energy, y_agg = aggregation.aircomp_aggregate(
+                        agg_updates, sup.idx, gains, beta, ks[4], **agg_kw)
+                if comp is not None and comp.decode is not None:
+                    # custom server-side reconstruction: the hook replaces
+                    # the default A^T unprojection of the k-subcarrier
+                    # payload; the 1/(r beta) unscale and the beyond-paper
+                    # d/k unbiasing stay the round body's job
+                    delta_hat = comp.decode(cfg, y_agg, sup, d) / (
+                        aggregation.realized_r(tx_mask, r) * beta)
+                    if cfg.unbiased_rescale:
+                        delta_hat = delta_hat * (d / k_coords)
             metrics.update(beta=beta, energy=energy,
                            subcarriers=jnp.asarray(k_used))
         else:   # digital server-side aggregation (registry hook)
@@ -370,22 +446,26 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
             metrics.update(beta=jnp.asarray(0.0), energy=jnp.asarray(0.0),
                            subcarriers=jnp.asarray(d))
 
-        # ---- error-feedback memory update: e_i <- u_i - s_i A^T A u_i,
-        # where s_i is the transmit clip scale — what was actually sent is
-        # the clipped sparsified update, so the clipped-away fraction stays
-        # in the residual memory too. Returned as the (r, d) cohort slice;
-        # the caller (ClientBank) owns the scatter into the (n, d) bank.
+        # ---- error-feedback memory update: e_i <- u_i - A^T A q(s_i u_i)
+        # — the residual is the raw update minus what was ACTUALLY sent
+        # (clipped, encoded, projected onto the live support), so the
+        # clipped-away / quantization-lost fraction stays in the memory.
+        # ``compressors.sparsify`` is THE projection definition every
+        # aggregation path shares (ISSUE 7 satellite: this block no longer
+        # re-implements it). ``tx_full`` is the as-transmitted (r, d)
+        # batch from whichever path aggregated — for the plain rand_k +
+        # no-clip config it IS flat_updates, tracing the seed-exact code.
+        # Returned as the (r, d) cohort slice; the caller (ClientBank)
+        # owns the scatter into the (n, d) bank.
         new_res_sel = res_sel
         if use_ef:
+            base = tx_full if (aircomp and tx_full is not None) \
+                else flat_updates
             if alg.sparsifies_transmit:
                 transmitted = jax.vmap(
-                    lambda u: randk.sparsify(u, idx, d))(flat_updates)
+                    lambda u: compressors.sparsify(u, sup, d))(base)
             else:
-                transmitted = flat_updates
-            if cfg.transmit_clip is not None and aircomp:
-                # computed once by whichever path aggregated (both set it
-                # under exactly this transmit_clip + error_feedback case)
-                transmitted = transmitted * transmit_scales[:, None]
+                transmitted = base
             if tx_mask is not None:
                 # a dropped client transmitted NOTHING: its whole update
                 # stays in the residual memory for its next participation
@@ -460,6 +540,30 @@ def _reject_stateful_channel(cfg: PFELSConfig, shim: str):
             f"state; use repro.fl.Trainer (DESIGN.md §11)")
 
 
+def _reject_legacy_compression(cfg: PFELSConfig, shim: str):
+    """The deprecated shims predate the compressor registry: a
+    CompressionSchedule needs the round counter and the running ε spend
+    (which only ``TrainState`` carries), and a carry-compressor
+    (top_k_ef) needs the bank's residual memory the shim only allocates
+    under ``cfg.error_feedback`` — refuse both rather than silently
+    running a different scheme (DESIGN.md §13)."""
+    alg = algorithms.get_algorithm(cfg.algorithm)
+    if not (alg.aircomp and alg.sparsifies_transmit):
+        return
+    if compressors.schedules.is_active(cfg.schedule):
+        raise ValueError(
+            f"cfg.schedule.mode={cfg.schedule.mode!r} needs the round "
+            f"counter and privacy-ledger state that the deprecated "
+            f"{shim} has nowhere to carry; use repro.fl.Trainer "
+            f"(DESIGN.md §13)")
+    if compressors.carry_required(cfg) and not cfg.error_feedback:
+        raise ValueError(
+            f"compressor {cfg.compressor!r} requires error-feedback "
+            f"residuals but the deprecated {shim} only allocates them "
+            f"with cfg.error_feedback=True; set error_feedback=True or "
+            f"use repro.fl.Trainer (DESIGN.md §13)")
+
+
 def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
                   unravel: Callable, mesh: Optional[Mesh] = None):
     """DEPRECATED legacy single-round entry — a thin shim over
@@ -481,6 +585,7 @@ def make_round_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
         "repro.fl.make_round_fn is deprecated; use repro.fl.Trainer.step "
         "(DESIGN.md §8)", DeprecationWarning, stacklevel=2)
     _reject_stateful_channel(cfg, "make_round_fn")
+    _reject_legacy_compression(cfg, "make_round_fn")
     trainer = _legacy_trainer(cfg, loss_fn, d, unravel, mesh)
     core = trainer._core
     leaks_delta_hat = (cfg.randk_mode == "server_topk"
@@ -526,6 +631,7 @@ def make_training_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
         "repro.fl.make_training_fn is deprecated; use repro.fl.Trainer.run "
         "(DESIGN.md §8)", DeprecationWarning, stacklevel=2)
     _reject_stateful_channel(cfg, "make_training_fn")
+    _reject_legacy_compression(cfg, "make_training_fn")
     t_rounds = cfg.rounds if rounds is None else rounds
     trainer = _legacy_trainer(cfg, loss_fn, d, unravel, mesh)
     core = trainer._core
@@ -551,14 +657,21 @@ def make_training_fn(cfg: PFELSConfig, loss_fn: Callable, d: int,
     return jax.jit(training_fn)
 
 
-def round_epsilon_spent(cfg: PFELSConfig, beta: float) -> float:
+def round_epsilon_spent(cfg: PFELSConfig, beta: float,
+                        d: Optional[int] = None) -> float:
     """Per-round eps actually consumed (Thm 3 inverse), for the ledger.
     Uses the channel model's POST-COMBINING noise std (== the raw sigma_0
     for single-antenna models): the intrinsic noise that actually
     perturbs the aggregate is what the DP guarantee rides on
-    (DESIGN.md §11)."""
+    (DESIGN.md §11) — and, for sparsifying AirComp schemes, C1 scaled by
+    the configured compressor's sensitivity factor (DESIGN.md §13), so
+    host recomputations (``PrivacyLedger``) reproduce the in-graph spend
+    exactly; ``d`` feeds dimension-dependent factors (stoch_quant)."""
+    alg = algorithms.get_algorithm(cfg.algorithm)
+    s = (compressors.sensitivity_factor(cfg, d)
+         if alg.aircomp and alg.sparsifies_transmit else 1.0)
     return privacy.round_epsilon(
-        beta, cfg.local_lr, cfg.local_steps, cfg.clip,
+        beta, cfg.local_lr, cfg.local_steps, cfg.clip * s,
         cfg.clients_per_round, cfg.num_clients, cfg.resolved_delta(),
         channels.effective_noise_std(cfg.channel))
 

@@ -78,7 +78,7 @@ def fused_transmit(updates_flat: jnp.ndarray, idx: jnp.ndarray,
                    unbiased_rescale: bool = False,
                    use_kernel: bool = True,
                    interpret: Optional[bool] = None,
-                   block: int = 4096):
+                   block: int = 4096, active=None):
     """Fused Alg. 2 lines 12-16 for the whole (r, d) update batch.
 
     updates_flat: (r, d); idx: (k,) rand_k subset; gains: (r,) effective
@@ -95,10 +95,16 @@ def fused_transmit(updates_flat: jnp.ndarray, idx: jnp.ndarray,
     the single PRNG-critical draw shared with the unfused path
     (``ref.dense_noise_and_mask``).
 
+    ``active``: optional (k,) 0/1 live-slot column of the support
+    (DESIGN.md §13) — folded into the dense mask/noise columns by
+    ``ref.dense_noise_and_mask``, so the kernel itself is untouched (a
+    deactivated slot is just a masked-off column in-tile).
+
     Returns (delta_hat (d,), energy, y (k,)) exactly like
     ``aircomp_aggregate``.
     """
-    mask, z_dense = ref.dense_noise_and_mask(idx, noise_key, sigma0, d)
+    mask, z_dense = ref.dense_noise_and_mask(idx, noise_key, sigma0, d,
+                                             active)
     u = updates_flat.astype(jnp.float32)
     r_div = r if tx_mask is None else jnp.maximum(jnp.sum(tx_mask), 1.0)
 

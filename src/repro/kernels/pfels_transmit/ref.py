@@ -23,14 +23,22 @@ import jax.numpy as jnp
 
 
 def dense_noise_and_mask(idx: jnp.ndarray, noise_key, sigma0: float,
-                         d: int):
+                         d: int, active: Optional[jnp.ndarray] = None):
     """(mask, z_dense): the 0/1 indicator of omega and the channel noise
     scattered onto it. THE single PRNG-critical noise draw
     (``sigma0 * normal(noise_key, (k,))``) shared by the fused and sharded
     AirComp paths — parity across execution modes (DESIGN.md §5) depends
-    on every path taking it from here."""
+    on every path taking it from here. ``active`` is the support's
+    optional (k,) 0/1 live-slot column (DESIGN.md §13): the draw keeps
+    its fixed k shape (the PRNG stream is schedule-independent), then
+    deactivated slots are zeroed out of BOTH columns — no signal, no
+    measured noise on an unallocated subcarrier."""
     noise = sigma0 * jax.random.normal(noise_key, (idx.shape[0],))
-    mask = jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
+    if active is None:
+        mask = jnp.zeros((d,), jnp.float32).at[idx].set(1.0)
+    else:
+        noise = noise * active
+        mask = jnp.zeros((d,), jnp.float32).at[idx].set(active)
     z_dense = jnp.zeros((d,), jnp.float32).at[idx].set(noise)
     return mask, z_dense
 

@@ -22,10 +22,11 @@ import time
 
 import jax
 
-from repro.configs.base import PFELSConfig
+from repro.configs.base import CompressionSchedule, PFELSConfig
 from repro.configs.paper_models import BENCH_MLP, BENCH_CNN_CIFAR
 from repro.core.channel import scaled_channel
 from repro.core.channels import list_channel_models
+from repro.core.compressors import list_compressors
 from repro.fl import Trainer, list_algorithms
 from repro.data import make_federated_classification, make_population_source
 from repro.models import cnn
@@ -50,6 +51,14 @@ def run_simulation(args):
         algorithm=args.algorithm,
         dp_fedavg_sigma=args.dp_sigma,
         bank_backend=args.bank,
+        compressor=args.compressor,
+        quant_bits=args.quant_bits,
+        threshold_frac=args.threshold_frac,
+        error_feedback=args.error_feedback,
+        transmit_clip=args.transmit_clip,
+        schedule=CompressionSchedule(
+            mode=args.schedule, k_end_ratio=args.k_end_ratio,
+            power_end=args.power_end, eps_floor=args.eps_floor),
         channel=chan)
     image_shape = (model_cfg.in_channels, model_cfg.image_size,
                    model_cfg.image_size)
@@ -87,7 +96,9 @@ def run_simulation(args):
     out = {"config": {"algorithm": cfg.algorithm, "epsilon": cfg.epsilon,
                       "p": cfg.compression_ratio, "rounds": cfg.rounds,
                       "clients": cfg.num_clients, "d": d,
-                      "channel": cfg.channel.model},
+                      "channel": cfg.channel.model,
+                      "compressor": cfg.compressor,
+                      "schedule": cfg.schedule.mode},
            "history": history,
            "energy_total": energy_total,
            "privacy": {"per_round_eps_max": totals["eps_max_round"],
@@ -134,6 +145,41 @@ def main():
                     help="round-to-round gain correlation (markov_fading)")
     ap.add_argument("--dropout-prob", type=float, default=0.1,
                     help="per-round transmission dropout probability")
+    ap.add_argument("--compressor", default="rand_k",
+                    choices=list_compressors(),
+                    help="update compressor from the "
+                         "repro.core.compressors registry (DESIGN.md "
+                         "§13): rand_k is the paper's sparsifier; "
+                         "top_k_ef does magnitude top-k of the released "
+                         "aggregate with mandatory error feedback; "
+                         "threshold keeps coords above --threshold-frac "
+                         "of the max; stoch_quant adds --quant-bits "
+                         "unbiased stochastic quantization (its norm "
+                         "inflation is charged to the privacy ledger)")
+    ap.add_argument("--quant-bits", type=int, default=8,
+                    help="signed quantization bits (stoch_quant)")
+    ap.add_argument("--threshold-frac", type=float, default=0.1,
+                    help="live-coordinate threshold as a fraction of "
+                         "max|delta_hat| (threshold)")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="per-client error-feedback residual memory "
+                         "(forced on by carry compressors like top_k_ef)")
+    ap.add_argument("--transmit-clip", type=float, default=None,
+                    help="per-client l2 cap on the transmitted update")
+    ap.add_argument("--schedule", default="none",
+                    choices=["none", "linear", "budget"],
+                    help="CompressionSchedule mode (DESIGN.md §13): "
+                         "'linear' anneals the live-k fraction to "
+                         "--k-end-ratio and power to --power-end over "
+                         "the rounds; 'budget' additionally paces the "
+                         "per-round epsilon ceiling against the "
+                         "remaining eps_total = epsilon * rounds")
+    ap.add_argument("--k-end-ratio", type=float, default=1.0,
+                    help="final live fraction of the k budget (schedule)")
+    ap.add_argument("--power-end", type=float, default=1.0,
+                    help="final power-limit multiplier (schedule)")
+    ap.add_argument("--eps-floor", type=float, default=0.0,
+                    help="per-round epsilon floor (budget schedule)")
     ap.add_argument("--bank", default="resident",
                     choices=["resident", "streamed"],
                     help="ClientBank backend (DESIGN.md §10): 'streamed' "

@@ -124,6 +124,43 @@ def _cases():
         cases[f"chan_dropout-fused{tag}"] = (
             dict(bank_backend=backend),
             dict(model="dropout", dropout_prob=0.4), 1)
+    # compressor-registry rows (ISSUE 7, DESIGN.md §13): every non-default
+    # registry entry × bank backend on the fused default path. The legacy
+    # rand_k rows above are the bit-identity proof of the registry
+    # extraction — their digests are the UNCHANGED pre-registry pins,
+    # verified exact (``--check``) across the refactor.
+    from repro.configs import CompressionSchedule
+    for backend in ("resident", "streamed"):
+        tag = "" if backend == "resident" else "-streamed"
+        cases[f"comp_top_k_ef{tag}"] = (
+            dict(bank_backend=backend, compressor="top_k_ef",
+                 transmit_clip=0.5), {}, 1)
+        cases[f"comp_threshold{tag}"] = (
+            dict(bank_backend=backend, compressor="threshold",
+                 threshold_frac=0.3), {}, 1)
+        cases[f"comp_stoch_quant{tag}"] = (
+            dict(bank_backend=backend, compressor="stoch_quant",
+                 quant_bits=6, transmit_clip=0.5), {}, 1)
+    # one unfused row per compressor pins the reference path the fused
+    # kernel is parity-tested against (tests/test_compressors.py)
+    cases["comp_top_k_ef-unfused"] = (
+        dict(compressor="top_k_ef", transmit_clip=0.5,
+             use_fused_kernel=False), {}, 1)
+    cases["comp_stoch_quant-unfused"] = (
+        dict(compressor="stoch_quant", quant_bits=6, transmit_clip=0.5,
+             use_fused_kernel=False), {}, 1)
+    # the sharded cohort path with an encode hook (per-shard quant keys)
+    cases["comp_stoch_quant-sharded"] = (
+        dict(compressor="stoch_quant", quant_bits=6, transmit_clip=0.5,
+             client_sharding="cohort"), {}, 8)
+    # adaptive-schedule rows: the in-graph k anneal (Support.active) and
+    # the paced per-round epsilon ceiling (DESIGN.md §13)
+    cases["comp_sched_linear"] = (
+        dict(schedule=CompressionSchedule(mode="linear", k_end_ratio=0.5,
+                                          power_end=0.7)), {}, 1)
+    cases["comp_sched_budget"] = (
+        dict(schedule=CompressionSchedule(mode="budget", eps_floor=0.1)),
+        {}, 1)
     return cases
 
 
