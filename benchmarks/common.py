@@ -9,7 +9,7 @@ from jax.flatten_util import ravel_pytree
 
 from repro.configs import PFELSConfig
 from repro.configs.paper_models import BENCH_MLP
-from repro.core.channel import PAPER_D, scaled_channel  # shared regime helper
+from repro.core.channel import scaled_channel  # shared regime helper
 from repro.data import make_federated_classification
 from repro.fl import Trainer
 from repro.fl.api import replace

@@ -10,15 +10,14 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
+from repro import checkpoint
 from repro.configs import PFELSConfig, reduced_config
 from repro.core.channel import scaled_channel
 from repro.data import make_lm_sequences
 from repro.launch.mesh import make_host_mesh, use_mesh
 from repro.launch.steps import make_pfels_train_step
 from repro.models import transformer as T
-from repro import checkpoint
 
 
 def main():

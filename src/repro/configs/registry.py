@@ -6,17 +6,16 @@ import dataclasses
 from typing import Dict
 
 from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
-
-from repro.configs.qwen2_5_14b import CONFIG as _qwen25
-from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
-from repro.configs.zamba2_2_7b import CONFIG as _zamba2
-from repro.configs.stablelm_12b import CONFIG as _stablelm
-from repro.configs.phi3_mini_3_8b import CONFIG as _phi3
-from repro.configs.mamba2_130m import CONFIG as _mamba2
-from repro.configs.whisper_tiny import CONFIG as _whisper
 from repro.configs.command_r_35b import CONFIG as _commandr
-from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3moe
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.phi3_mini_3_8b import CONFIG as _phi3
+from repro.configs.qwen2_5_14b import CONFIG as _qwen25
 from repro.configs.qwen2_vl_72b import CONFIG as _qwen2vl
+from repro.configs.qwen3_moe_30b_a3b import CONFIG as _qwen3moe
+from repro.configs.stablelm_12b import CONFIG as _stablelm
+from repro.configs.whisper_tiny import CONFIG as _whisper
+from repro.configs.zamba2_2_7b import CONFIG as _zamba2
 
 ARCHS: Dict[str, ModelConfig] = {c.name: c for c in (
     _qwen25, _granite, _zamba2, _stablelm, _phi3,

@@ -8,7 +8,6 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ChannelConfig
 from repro.core import channel as chan
 from repro.core import randk
 from repro.core.compressors import base as comp_base

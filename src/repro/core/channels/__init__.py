@@ -10,6 +10,8 @@ package registers the four built-in scenarios:
   - ``mimo_mrc``      — M-antenna base station, maximum-ratio combining
   - ``dropout``       — Bernoulli transmission dropout over any base model
 """
+from repro.core.channels import (block_fading, dropout, markov,  # noqa: F401
+                                 mimo)
 from repro.core.channels.base import (DESIGN_GAIN_BIG, ChannelModel,
                                       ChannelRound, design_gains,
                                       effective_noise_std,
@@ -17,8 +19,6 @@ from repro.core.channels.base import (DESIGN_GAIN_BIG, ChannelModel,
                                       observed_gains, realized_cohort_size,
                                       register_channel_model,
                                       unregister_channel_model)
-from repro.core.channels import (block_fading, dropout, markov,  # noqa: F401
-                                 mimo)
 
 __all__ = [
     "ChannelModel", "ChannelRound", "DESIGN_GAIN_BIG", "design_gains",

@@ -24,7 +24,7 @@ the gains lane rather than widening the 7-lane split.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax.numpy as jnp
 

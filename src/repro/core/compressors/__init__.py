@@ -17,6 +17,8 @@ package registers the four built-in schemes:
 ``schedules`` evaluates ``CompressionSchedule`` (k / power / per-round ε
 annealed against the remaining budget) inside the compiled scan.
 """
+from repro.core.compressors import (quant, rand_k, schedules,  # noqa: F401
+                                    threshold, top_k)
 from repro.core.compressors.base import (QUANT_STREAM_TAG, Compressor,
                                          Support, and_active, as_support,
                                          carry_required, decode_support,
@@ -26,8 +28,6 @@ from repro.core.compressors.base import (QUANT_STREAM_TAG, Compressor,
                                          sensitivity_factor, sparsify,
                                          support_size,
                                          unregister_compressor)
-from repro.core.compressors import (quant, rand_k, schedules,  # noqa: F401
-                                    threshold, top_k)
 
 __all__ = [
     "Compressor", "Support", "QUANT_STREAM_TAG", "and_active",

@@ -15,7 +15,6 @@ Key identities (tested):
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

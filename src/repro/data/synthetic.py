@@ -8,11 +8,9 @@ accuracies — are the reproduction target (DESIGN.md §2).
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def make_prototypes(key, num_classes: int, image_shape, scale: float = 1.0):

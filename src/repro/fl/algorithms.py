@@ -16,10 +16,10 @@ Built-in entries reproduce the paper: ``pfels`` (Alg. 2 + Thm 5),
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import PFELSConfig
@@ -203,6 +203,24 @@ def _dp_fedavg_aggregate(cfg: PFELSConfig, flat_updates, noise_key, *,
         flat_updates, cfg.clip, cfg.dp_fedavg_sigma, noise_key, r=r)
 
 
+def _dp_fedavg_spend(cfg: PFELSConfig, beta, d=None):
+    """Per-round eps of the server-side Gaussian mechanism (Thm 1
+    inverted). ``dp_fedavg_aggregate`` releases the clipped-update mean —
+    client-level l2-sensitivity C/r — carrying noise std C*sigma/sqrt(r),
+    i.e. noise multiplier z = sigma*sqrt(r), so
+    eps = sqrt(2 ln(1.25/delta)) / z. Static config only (``beta`` plays
+    no role in the digital baseline), hence a trace-safe constant.
+
+    Found by replint RL301: the scheme injected DP noise every round but
+    never charged the in-graph ledger, so reported budgets stayed (0, 0)
+    — exactly the accounting drift arXiv 2304.04164 warns about."""
+    z = cfg.dp_fedavg_sigma * math.sqrt(cfg.clients_per_round)
+    eps = math.sqrt(2.0 * math.log(1.25 / cfg.resolved_delta())) / z
+    # no cfg.epsilon cap here: unlike Thm 5 there is no design constraint
+    # keeping this under budget, and a capped report would under-charge
+    return jnp.float32(eps)
+
+
 def _fedavg_aggregate(cfg: PFELSConfig, flat_updates, noise_key, *,
                       d: int, r: int):
     return aggregation.fedavg_aggregate(flat_updates)
@@ -222,7 +240,8 @@ register_algorithm("wfl_pdp", Algorithm(
     design_beta=_wfl_pdp_beta, privacy_spend=_dp_epsilon_spend_dense))
 
 register_algorithm("dp_fedavg", Algorithm(
-    name="dp_fedavg", aircomp=False, server_aggregate=_dp_fedavg_aggregate))
+    name="dp_fedavg", aircomp=False, server_aggregate=_dp_fedavg_aggregate,
+    privacy_spend=_dp_fedavg_spend))
 
 register_algorithm("fedavg", Algorithm(
     name="fedavg", aircomp=False, server_aggregate=_fedavg_aggregate))

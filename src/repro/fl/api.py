@@ -45,10 +45,9 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh
-
-import numpy as np
 
 from repro.configs.base import PFELSConfig
 from repro.core import channels, compressors, privacy
@@ -215,7 +214,8 @@ class Trainer:
         sum) feed the CompressionSchedule inside the compiled body
         (DESIGN.md §13) — traced scalars, never a host round-trip."""
         ks = rounds.split_round_key(round_key)
-        sel = rounds.sample_cohort(ks[0], self.cfg.num_clients,
+        sel = rounds.sample_cohort(ks[rounds.ROUND_KEY_LANES["selection"]],
+                                   self.cfg.num_clients,
                                    self.cfg.clients_per_round)
         res_sel = self.bank.gather(bank, sel)
         new_params, metrics, new_res_sel, delta_hat, new_chan = \
@@ -329,8 +329,8 @@ class Trainer:
                 f"truncates the population (and the Thm 2 r/n "
                 f"accounting)")
         ks_all = jax.vmap(rounds.split_round_key)(round_keys)  # (T, 7, ·)
-        sels = jax.vmap(lambda ks: rounds.sample_cohort(ks[0], n, r))(
-            ks_all)
+        sels = jax.vmap(lambda ks: rounds.sample_cohort(
+            ks[rounds.ROUND_KEY_LANES["selection"]], n, r))(ks_all)
         sels_np = np.asarray(sels)
         step_fn = self._cohort_step()
 

@@ -300,12 +300,13 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
     def cohort_core(params, p_sel, cx, cy, ks, res_sel=None,
                     prev_delta=None, chan_carry=None, sel=None,
                     t=None, eps_spent=None):
-        ck = jax.random.split(ks[1], r)
+        ck = jax.random.split(ks[ROUND_KEY_LANES["client_train"]], r)
         # stochastic-rounding keys: fold_in-derived from the support lane
         # (DESIGN.md §5 — the 7-lane round split stays pinned); unused
         # (DCE'd) unless the compressor encodes
         qk = jax.random.split(
-            jax.random.fold_in(ks[3], compressors.QUANT_STREAM_TAG), r)
+            jax.random.fold_in(ks[ROUND_KEY_LANES["support"]],
+                               compressors.QUANT_STREAM_TAG), r)
 
         # ---- channel realization for this round (DESIGN.md §11): the
         # registered model consumes the gains/csi lanes and evolves its
@@ -313,7 +314,8 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
         # precompensate with noisy gain estimates while the MAC applies
         # the true gains
         new_chan_carry, cr = chan_model.step(
-            chan_carry, cfg.channel, r, sel, ks[2], ks[6])
+            chan_carry, cfg.channel, r, sel,
+            ks[ROUND_KEY_LANES["gains"]], ks[ROUND_KEY_LANES["csi"]])
         if cr.tx_mask is not None and not has_mask:
             # a silent discard here would let beta design / r_realized see
             # the mask while aggregation ignores it — contradictory
@@ -334,7 +336,8 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
             # precompensation the devices actually apply — with dropped
             # clients lifted out of the min (design_gains)
             sup, beta, k_used = support_and_beta(
-                channels.design_gains(cr), p_sel, prev_delta, ks[3],
+                channels.design_gains(cr), p_sel, prev_delta,
+                ks[ROUND_KEY_LANES["support"]],
                 t, eps_spent)
 
         # ---- local training (lines 5-11) + error feedback [28-30]
@@ -361,7 +364,7 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                      else jnp.ones((1,), jnp.float32)),
                     beta if beta is not None else jnp.asarray(1.0,
                                                               jnp.float32),
-                    ks[4])
+                    ks[ROUND_KEY_LANES["channel_noise"]])
             if aircomp:
                 agg_sharded = (delta_sh, energy_sh)
                 tx_full = tx_sh
@@ -410,11 +413,13 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
                     # through the MRC combine (DESIGN.md §12)
                     delta_hat, energy, y_agg = \
                         aggregation.aircomp_aggregate_fused(
-                            agg_updates, sup.idx, gains, beta, ks[4],
+                            agg_updates, sup.idx, gains, beta,
+                            ks[ROUND_KEY_LANES["channel_noise"]],
                             gains_ant=cr.gains_ant, **agg_kw)
                 else:
                     delta_hat, energy, y_agg = aggregation.aircomp_aggregate(
-                        agg_updates, sup.idx, gains, beta, ks[4], **agg_kw)
+                        agg_updates, sup.idx, gains, beta,
+                        ks[ROUND_KEY_LANES["channel_noise"]], **agg_kw)
                 if comp is not None and comp.decode is not None:
                     # custom server-side reconstruction: the hook replaces
                     # the default A^T unprojection of the k-subcarrier
@@ -430,8 +435,9 @@ def _build_cohort_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
             # a dropped client uploads nothing in the digital schemes too
             agg_in = (flat_updates * tx_mask[:, None]
                       if tx_mask is not None else flat_updates)
-            delta_hat = alg.server_aggregate(cfg, agg_in, ks[4],
-                                             d=d, r=r)
+            delta_hat = alg.server_aggregate(
+                cfg, agg_in, ks[ROUND_KEY_LANES["channel_noise"]],
+                d=d, r=r)
             if tx_mask is not None:
                 # same realized-r contract as the AirComp paths: the hook
                 # averaged over the nominal r, so rescale to the mean of
@@ -500,7 +506,8 @@ def _build_round_core(cfg: PFELSConfig, loss_fn: Callable, d: int,
     def round_core(params, power_limits, data_x, data_y, key,
                    residuals=None, prev_delta=None):
         ks = split_round_key(key)
-        sel = sample_cohort(ks[0], cfg.num_clients, r)
+        sel = sample_cohort(ks[ROUND_KEY_LANES["selection"]],
+                            cfg.num_clients, r)
         res_sel = (residuals[sel]
                    if cfg.error_feedback and residuals is not None
                    else None)

@@ -2,7 +2,6 @@
 use_kernel=True; interpret=True on CPU)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.kernels.ssd_scan.kernel import ssd_scan as ssd_scan_kernel
 from repro.kernels.ssd_scan.ref import ssd_scan_ref

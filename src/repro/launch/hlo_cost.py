@@ -20,7 +20,6 @@ Costs per op:
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple

@@ -4,9 +4,8 @@ from __future__ import annotations
 
 import enum
 
-import numpy as np
-
 import jax
+import numpy as np
 from jax.sharding import Mesh
 
 try:  # jax >= 0.5 has explicit mesh axis types

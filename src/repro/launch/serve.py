@@ -23,18 +23,19 @@ def serve(arch: str, *, reduced: bool, batch: int, prompt_len: int,
           window=None):
     cfg = reduced_config(arch) if reduced else get_config(arch)
     key = jax.random.PRNGKey(seed)
-    params, _ = T.init_params(key, cfg)
+    init_key, tok_key, vis_key, aud_key = jax.random.split(key, 4)
+    params, _ = T.init_params(init_key, cfg)
 
     s_text = prompt_len - cfg.vision_prefix if cfg.family == "vlm" \
         else prompt_len
-    toks = jax.random.randint(key, (batch, s_text), 0, cfg.vocab_size)
+    toks = jax.random.randint(tok_key, (batch, s_text), 0, cfg.vocab_size)
     pbatch = {"tokens": toks}
     if cfg.family == "vlm":
         pbatch["vision_embeds"] = 0.02 * jax.random.normal(
-            key, (batch, cfg.vision_prefix, cfg.d_model), jnp.bfloat16)
+            vis_key, (batch, cfg.vision_prefix, cfg.d_model), jnp.bfloat16)
     if cfg.is_encoder_decoder:
         pbatch["audio_embeds"] = 0.02 * jax.random.normal(
-            key, (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+            aud_key, (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
 
     prefill = jax.jit(lambda p, b: T.prefill(p, cfg, b,
                                              extra_slots=new_tokens,

@@ -13,12 +13,11 @@ stack (PFELS applies to training only).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, PFELSConfig
 from repro.core import aggregation, channel, power_control, randk

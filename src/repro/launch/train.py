@@ -23,12 +23,12 @@ import time
 import jax
 
 from repro.configs.base import CompressionSchedule, PFELSConfig
-from repro.configs.paper_models import BENCH_MLP, BENCH_CNN_CIFAR
+from repro.configs.paper_models import BENCH_CNN_CIFAR, BENCH_MLP
 from repro.core.channel import scaled_channel
 from repro.core.channels import list_channel_models
 from repro.core.compressors import list_compressors
-from repro.fl import Trainer, list_algorithms
 from repro.data import make_federated_classification, make_population_source
+from repro.fl import Trainer, list_algorithms
 from repro.models import cnn
 
 

@@ -17,8 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import layers
-from repro.sharding.rules import (constraint, get_abstract_mesh_or_none,
-                                  resolve_spec)
+from repro.sharding.rules import constraint, get_abstract_mesh_or_none
 
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
 

@@ -5,7 +5,6 @@ ResNet-18 (FEMNIST), plus an MLP for fast benchmark sweeps. Pure JAX
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ logical axis names (resolved by repro.sharding.rules).
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

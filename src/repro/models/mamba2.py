@@ -13,7 +13,6 @@ x_t in R^P.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,9 +10,8 @@ Three entry points per model: ``loss_fn`` (train), ``prefill`` and
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -270,7 +269,7 @@ def forward_train(params, cfg: ModelConfig, batch, *, remat: bool = True,
     """batch: {tokens, labels, [vision_embeds|audio_embeds]}.
     Returns (loss, metrics)."""
     tokens = batch["tokens"]
-    enc_kv_stack = None
+    enc_out = None
     if cfg.is_encoder_decoder:
         enc_out = encode(params, cfg, batch["audio_embeds"])
     x, pos = _embed_inputs(params, cfg, tokens,

@@ -1,6 +1,6 @@
-from repro.optim.sgd import sgd_init, sgd_update
 from repro.optim.adam import adam_init, adam_update
 from repro.optim.schedules import constant, cosine, warmup_cosine
+from repro.optim.sgd import sgd_init, sgd_update
 
 __all__ = ["sgd_init", "sgd_update", "adam_init", "adam_update",
            "constant", "cosine", "warmup_cosine"]

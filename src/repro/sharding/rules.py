@@ -13,7 +13,9 @@ Conventions (see DESIGN.md §6):
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+import contextlib
+import threading
+from typing import Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -51,9 +53,6 @@ def mesh_axis_size(mesh: Mesh, axis) -> int:
         return n
     return mesh.shape.get(axis, 1)
 
-
-import contextlib
-import threading
 
 _EXCLUDED = threading.local()
 _OVERRIDES = threading.local()

@@ -1,0 +1,60 @@
+"""Negative fixture: near-miss patterns for every AST rule — correct key
+splitting, named lanes, distinct tags, trace-safe reachable code, sized
+shape ops, and a charged aircomp path. replint must report NOTHING here.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.privacy import ledger_spend
+from repro.fl.rounds import ROUND_KEY_LANES, split_round_key
+
+ALPHA_STREAM_TAG = 0x0101
+BETA_STREAM_TAG = 0x0202
+
+
+def split_then_draw(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, (3,))
+    b = jax.random.uniform(k2, (3,))
+    return a + b
+
+
+def loop_resplit(key):
+    total = jnp.zeros(())
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        total = total + jax.random.normal(sub, ())
+    return total
+
+
+def folded_redraw(key):
+    a = jax.random.normal(key, ())
+    key = jax.random.fold_in(key, ALPHA_STREAM_TAG)
+    b = jax.random.normal(key, ())
+    return a + b
+
+
+def named_lane(key):
+    ks = split_round_key(key)
+    return ks[ROUND_KEY_LANES["gains"]]
+
+
+def sized_support(x, k):
+    return jnp.nonzero(x, size=4, fill_value=0)[0]
+
+
+def _build_cohort_core(cfg):
+    def cohort_core(x):
+        y = jnp.where(x > 0, x, 0.0)
+        return jax.lax.cond(x.shape[0] > 1, lambda: y, lambda: -y)
+    return cohort_core
+
+
+def aircomp_aggregate(updates, beta):
+    return updates
+
+
+def charged_round(updates, beta, ledger):
+    out = aircomp_aggregate(updates, beta)
+    ledger = ledger_spend(ledger, 0.1)
+    return out, ledger

@@ -1,0 +1,23 @@
+"""Fixture: RL101 — a key consumed twice, and a loop draw without
+re-splitting. ``branch_ok`` must NOT fire (mutually exclusive arms)."""
+import jax
+
+
+def draw_twice(key):
+    a = jax.random.normal(key, (3,))
+    b = jax.random.uniform(key, (3,))
+    return a + b
+
+
+def loop_draw(key):
+    total = 0.0
+    for _ in range(4):
+        total = total + jax.random.normal(key, ())
+    return total
+
+
+def branch_ok(key, flag):
+    if flag:
+        return jax.random.normal(key, ())
+    else:
+        return jax.random.uniform(key, ())

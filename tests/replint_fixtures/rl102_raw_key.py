@@ -1,0 +1,6 @@
+"""Fixture: RL102 — raw PRNGKey construction in library-style code."""
+import jax
+
+
+def make_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,12 @@
+"""Fixture: RL103 — integer lane subscript on a split_round_key result,
+both assignment-derived and via the conventional ``ks`` parameter."""
+from repro.fl.rounds import split_round_key
+
+
+def assigned(key):
+    lanes = split_round_key(key)
+    return lanes[2]
+
+
+def threaded(ks):
+    return ks[4]

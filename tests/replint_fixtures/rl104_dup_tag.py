@@ -1,0 +1,10 @@
+"""Fixture: RL104 — duplicate stream-tag constants plus a magic literal
+shadowing a constant."""
+import jax
+
+ALPHA_STREAM_TAG = 0x5151
+BETA_STREAM_TAG = 0x5151
+
+
+def fold(key):
+    return jax.random.fold_in(key, 0x5151)

@@ -1,0 +1,11 @@
+"""Fixture: RL201 — Python branch on a traced value inside the
+cohort-core-reachable closure."""
+import jax.numpy as jnp
+
+
+def _build_cohort_core(cfg):
+    def cohort_core(x):
+        if jnp.sum(x) > 0:
+            return x
+        return -x
+    return cohort_core

@@ -1,0 +1,8 @@
+"""Fixture: RL202 — float() on a traced value in reachable code."""
+import jax.numpy as jnp
+
+
+def _build_cohort_core(cfg):
+    def cohort_core(x):
+        return float(jnp.sum(x))
+    return cohort_core

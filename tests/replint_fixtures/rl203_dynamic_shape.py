@@ -1,0 +1,10 @@
+"""Fixture: RL203 — size-less nonzero and 1-arg where (file-wide rule)."""
+import jax.numpy as jnp
+
+
+def support(x):
+    return jnp.nonzero(x)
+
+
+def where_one_arg(x):
+    return jnp.where(x > 0)

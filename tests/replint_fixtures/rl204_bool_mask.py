@@ -1,0 +1,5 @@
+"""Fixture: RL204 — boolean-mask indexing (file-wide rule)."""
+
+
+def mask_index(x):
+    return x[x > 0]

@@ -1,0 +1,8 @@
+"""Fixture: RL205 — a host numpy op inside reachable code."""
+import numpy as np
+
+
+def _build_cohort_core(cfg):
+    def cohort_core(x):
+        return np.asarray(x)
+    return cohort_core

@@ -1,0 +1,10 @@
+"""Fixture: RL304 — a root reaching aircomp aggregation with no ledger
+charge anywhere on the path."""
+
+
+def aircomp_aggregate(updates, beta):
+    return updates
+
+
+def run_round(updates, beta):
+    return aircomp_aggregate(updates, beta)

@@ -3,7 +3,6 @@ simulation/production equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import aggregation, randk
 

@@ -20,11 +20,10 @@ from repro.core import aggregation, channel, power_control, randk
 from repro.data import (ArraySource, make_federated_classification,
                         make_population_source, prefetch_cohorts)
 from repro.data.loader import ClientFnSource
-from repro.fl import Trainer, make_bank
+from repro.fl import Trainer, make_bank, rounds
 from repro.fl.api import replace
 from repro.fl.bank import cohort_lane_keys
 from repro.fl.client import local_train, model_update
-from repro.fl import rounds
 
 BASE = dict(num_clients=20, clients_per_round=4, local_steps=2,
             local_lr=0.05, compression_ratio=0.3, epsilon=2.0, rounds=2)

@@ -1,15 +1,13 @@
 """Beyond-paper extensions: imperfect CSI + server-guided top-k."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.flatten_util import ravel_pytree
 
 from repro.configs import ChannelConfig, PFELSConfig
 from repro.configs.paper_models import BENCH_MLP
-from repro.core import aggregation, channel, randk
+from repro.core import aggregation, channel
 from repro.data import make_federated_classification
 from repro.fl import make_round_fn, setup
 from repro.models import cnn

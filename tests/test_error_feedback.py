@@ -2,13 +2,12 @@
 untransmitted mass and improves sparsified convergence."""
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.flatten_util import ravel_pytree
 
 from repro.configs import PFELSConfig
 from repro.configs.paper_models import BENCH_MLP
 from repro.data import make_federated_classification
-from repro.fl import evaluate, make_round_fn, setup
+from repro.fl import make_round_fn, setup
 from repro.models import cnn
 
 

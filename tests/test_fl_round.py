@@ -1,5 +1,4 @@
 """Full FL rounds (simulation mode): all algorithms run and PFELS learns."""
-import functools
 
 import jax
 import jax.numpy as jnp

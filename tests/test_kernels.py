@@ -95,7 +95,7 @@ def test_kernel_matches_model_path():
     """models.mamba2.mamba_train(use_kernel=True) == use_kernel=False."""
     import dataclasses
     from repro.configs import reduced_config
-    from repro.models import mamba2, transformer as T
+    from repro.models import mamba2
     cfg = dataclasses.replace(reduced_config("mamba2-130m"),
                               dtype="float32", param_dtype="float32")
     key = jax.random.PRNGKey(0)

@@ -1,7 +1,6 @@
 """Launch-layer glue: input specs + lower/compile for every step kind on a
 host mesh with reduced archs (the 512-device production meshes are covered
 by the dry-run itself)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -96,7 +96,6 @@ def test_sliding_window_decode_ring_buffer():
     b, s = 1, 20
     toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
     # windowed full forward over all tokens
-    from repro.models import layers as L
     logits_fullfwd, _, _ = T.prefill(params, cfg,
                                      {"tokens": toks}, window=window)
     # prefill w tokens then ring-decode the rest

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import channel, channels, power_control, privacy, randk
 from repro.configs.base import ChannelConfig
+from repro.core import channel, channels, power_control, privacy, randk
 
 
 KW = dict(c1=1.0, eta=0.05, tau=5, epsilon=1.5, r=8, n=100, delta=1e-2,

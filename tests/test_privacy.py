@@ -5,10 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-
-from repro.core import privacy, randk
-from repro.fl.client import local_train, model_update
 from jax.flatten_util import ravel_pytree
+
+from repro.core import privacy
+from repro.fl.client import local_train, model_update
 
 
 def test_c2_formula():

@@ -1,0 +1,231 @@
+"""The replint pass itself (DESIGN.md §14): every rule ID fires on its
+deliberately-violating fixture in tests/replint_fixtures/, the clean
+fixture stays silent, the jaxpr scan sees a callback planted inside a
+``lax.scan`` body, the baseline machinery validates and goes stale, and
+the real bugs replint found on landing (serve.py key reuse, dp_fedavg's
+uncharged spend) stay fixed.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+import jax
+import jax.numpy as jnp
+
+from tools.repro_lint import ledger as rl_ledger
+from tools.repro_lint.__main__ import run_ast_checks
+from tools.repro_lint.astutil import parse_file
+from tools.repro_lint.baseline import (BaselineError, apply_baseline,
+                                       load_baseline)
+from tools.repro_lint.findings import RULES
+from tools.repro_lint.jaxpr_scan import check_jaxpr
+
+FIXTURES = os.path.join(ROOT, "tests", "replint_fixtures")
+
+
+def _scan(*names, sanctioned=()):
+    """Run the AST rules over the named fixture files only, with NO
+    sanctioned PRNG dirs (fixtures live under tests/, which the default
+    config sanctions for RL102)."""
+    files = [parse_file(os.path.join(FIXTURES, n), f"replint_fixtures/{n}")
+             for n in names]
+    return run_ast_checks(files, sanctioned_prng=sanctioned)
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ------------------------------------------------ one fixture per rule ID
+
+@pytest.mark.parametrize("fixture,rule,expect_n", [
+    ("rl101_key_reuse.py", "RL101", 2),     # reuse + loop draw
+    ("rl102_raw_key.py", "RL102", 1),
+    ("rl103_lane_literal.py", "RL103", 2),  # assigned + threaded ks
+    ("rl104_dup_tag.py", "RL104", 2),       # dup const + magic literal
+    ("rl201_traced_branch.py", "RL201", 1),
+    ("rl202_host_coercion.py", "RL202", 1),
+    ("rl203_dynamic_shape.py", "RL203", 2),  # nonzero + 1-arg where
+    ("rl204_bool_mask.py", "RL204", 1),
+    ("rl205_host_callback.py", "RL205", 1),
+    ("rl304_uncharged.py", "RL304", 1),
+])
+def test_rule_fires_on_fixture(fixture, rule, expect_n):
+    found = [f for f in _scan(fixture) if f.rule == rule]
+    assert len(found) == expect_n, [f.render() for f in found]
+    for f in found:
+        assert f.path.endswith(fixture)
+        assert f.line > 0
+        assert RULES[f.rule][0] in f.render()
+
+
+def test_branch_exclusive_arms_do_not_fire():
+    # rl101 fixture's branch_ok draws once per mutually exclusive arm
+    found = [f for f in _scan("rl101_key_reuse.py") if f.rule == "RL101"]
+    assert not any(f.symbol == "branch_ok" for f in found)
+
+
+def test_raw_key_sanctioned_dirs_respected():
+    # under the DEFAULT config the fixture dir (tests/) is sanctioned
+    files = [parse_file(os.path.join(FIXTURES, "rl102_raw_key.py"),
+                        "tests/replint_fixtures/rl102_raw_key.py")]
+    found = run_ast_checks(files)
+    assert not any(f.rule == "RL102" for f in found)
+
+
+def test_clean_fixture_is_silent():
+    found = _scan("clean.py")
+    assert found == [], [f.render() for f in found]
+
+
+# ----------------------------------------------------------- jaxpr scan
+
+def test_jaxpr_scan_flags_callback_in_scan_body():
+    def body(c, x):
+        y = jax.pure_callback(
+            lambda v: v, jax.ShapeDtypeStruct((), jnp.float32), x)
+        return c + y, y
+
+    closed = jax.make_jaxpr(
+        lambda xs: jax.lax.scan(body, jnp.float32(0), xs))(
+        jnp.arange(4, dtype=jnp.float32))
+    found = check_jaxpr(closed, "toy-scan")
+    assert any(f.rule == "RL206" and "pure_callback" in f.message
+               for f in found)
+    assert all(f.path == "<jaxpr:toy-scan>" for f in found)
+
+
+def test_jaxpr_scan_clean_scan():
+    closed = jax.make_jaxpr(
+        lambda xs: jax.lax.scan(lambda c, x: (c + x, c), jnp.float32(0),
+                                xs))(jnp.arange(4, dtype=jnp.float32))
+    assert check_jaxpr(closed, "toy-scan") == []
+
+
+# ----------------------------------------------- registry completeness
+
+class _Rec:
+    def __init__(self, **kw):
+        self.__dict__.update(kw)
+
+
+def test_rl301_rl302_injected_registries(tmp_path):
+    found = rl_ledger.check_registries(
+        str(tmp_path),
+        algorithms={"nospend": _Rec(privacy_spend=None),
+                    "ok": _Rec(privacy_spend=lambda cfg, b, d=None: 0.1)},
+        compressors={"nosens": _Rec(sensitivity=None),
+                     "ok": _Rec(sensitivity=lambda cfg, d: 1.0)})
+    assert {(f.rule, f.symbol) for f in found} == {
+        ("RL301", "nospend"), ("RL302", "nosens")}
+
+
+def test_rl303_coverage(tmp_path):
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "tests" / "a_test.py").write_text(
+        "CASES = ['covered_alg']\n")
+    (tmp_path / "goldens.json").write_text(
+        json.dumps({"cases": {"covered_chan-fused": {}}}))
+    found = rl_ledger.check_coverage(
+        str(tmp_path), goldens_rel="goldens.json", tests_rel="tests",
+        names={"algorithm": {"covered_alg": "x.py", "orphan_alg": "x.py"},
+               "channel": {"covered_chan": "y.py"}})
+    assert [(f.rule, f.symbol) for f in found] == [
+        ("RL303", "orphan_alg")]
+
+
+def test_goldens_schema_guard(tmp_path):
+    (tmp_path / "bad.json").write_text("{not json")
+    assert rl_ledger.check_goldens_schema(
+        str(tmp_path), "bad.json") is not None
+    (tmp_path / "nocases.json").write_text("{}")
+    assert rl_ledger.check_goldens_schema(
+        str(tmp_path), "nocases.json") is not None
+    assert rl_ledger.check_goldens_schema(ROOT) is None
+
+
+# ------------------------------------------------------------- baseline
+
+def test_baseline_suppresses_and_goes_stale(tmp_path):
+    bl = tmp_path / "baseline.toml"
+    bl.write_text(
+        '[[entry]]\nrule = "RL102"\n'
+        'path = "replint_fixtures/rl102_raw_key.py"\n'
+        'match = "PRNGKey"\nreason = "fixture"\n')
+    entries = load_baseline(str(bl))
+    findings = _scan("rl102_raw_key.py")
+    kept, suppressed, stale = apply_baseline(findings, entries)
+    assert stale == [] and len(suppressed) == 1
+    assert not any(f.rule == "RL102" for f in kept)
+    # the same entry against the clean fixture matches nothing -> stale
+    _, _, stale = apply_baseline(_scan("clean.py"), entries)
+    assert len(stale) == 1
+
+
+def test_baseline_schema_errors(tmp_path):
+    bad = tmp_path / "b.toml"
+    bad.write_text('[[entry]]\nrule = "RL999"\npath = "x"\n'
+                   'reason = "?"\n')
+    with pytest.raises(BaselineError):
+        load_baseline(str(bad))
+    bad.write_text('[[entry]]\nrule = "RL101"\npath = "x"\n')
+    with pytest.raises(BaselineError):
+        load_baseline(str(bad))
+
+
+def test_repo_baseline_is_valid():
+    entries = load_baseline(os.path.join(
+        ROOT, "tools", "repro_lint", "baseline.toml"))
+    assert entries, "repo baseline should carry the reviewed exceptions"
+    assert all(e.reason for e in entries)
+
+
+# ------------------------------------- regressions for bugs replint found
+
+def test_serve_key_lanes_stay_split():
+    """launch/serve.py drew tokens and both embed banks from one key
+    (RL101, fixed this PR); the checker must stay silent on it."""
+    from tools.repro_lint.prng import check_key_reuse
+    path = os.path.join(ROOT, "src", "repro", "launch", "serve.py")
+    pf = parse_file(path, "src/repro/launch/serve.py")
+    assert check_key_reuse(pf) == []
+
+
+def test_dp_fedavg_charges_ledger():
+    """dp_fedavg injected server-side Gaussian noise but never charged
+    the in-graph ledger (RL301, fixed this PR): one round must now spend
+    the Thm-1 epsilon of its noise multiplier."""
+    import math
+
+    from repro.configs import PFELSConfig
+    from repro.fl import Trainer
+    from repro.fl.api import replace as state_replace
+
+    cfg = PFELSConfig(num_clients=4, clients_per_round=2, local_steps=1,
+                      local_lr=0.1, compression_ratio=0.5, epsilon=2.0,
+                      rounds=1, algorithm="dp_fedavg",
+                      use_fused_kernel=False)
+    key = jax.random.PRNGKey(0)
+    params = {"w": jnp.zeros((3,), jnp.float32)}
+    x = jax.random.normal(key, (4, 8, 3))
+    y = jnp.zeros((4, 8), jnp.float32)
+    loss_fn = lambda p, b: (jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2),
+                            ())
+
+    trainer = Trainer(cfg, loss_fn, params)
+    state = state_replace(trainer.init(jax.random.PRNGKey(1)),
+                          key=jax.random.PRNGKey(2))
+    end, metrics = trainer.run(state, x, y, rounds=1)
+
+    z = cfg.dp_fedavg_sigma * math.sqrt(cfg.clients_per_round)
+    expect = math.sqrt(2.0 * math.log(1.25 / cfg.resolved_delta())) / z
+    assert int(end.ledger.spends) == 1
+    assert float(end.ledger.eps_sum) == pytest.approx(expect, rel=1e-5)
+    assert float(metrics["eps_round"][0]) == pytest.approx(expect,
+                                                           rel=1e-5)

@@ -1,6 +1,5 @@
 """Sharding rules: divisibility fallback, cache specs, exclusions."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P

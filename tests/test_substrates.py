@@ -10,7 +10,7 @@ import pytest
 from repro import checkpoint
 from repro.data import (make_federated_classification, make_lm_sequences,
                         sample_batch)
-from repro.optim import (adam_init, adam_update, cosine, constant, sgd_init,
+from repro.optim import (adam_init, adam_update, constant, cosine, sgd_init,
                          sgd_update, warmup_cosine)
 
 

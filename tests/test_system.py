@@ -9,11 +9,9 @@ Validates the paper's principal empirical claims at CPU scale:
      PFELS transform keeps the model finite.
 """
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.flatten_util import ravel_pytree
 

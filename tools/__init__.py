@@ -1,0 +1,7 @@
+"""Repo maintenance and static-check tooling.
+
+Everything under ``tools/`` is host-side developer tooling — never imported
+by ``src/repro`` — and shares the CLI conventions in :mod:`tools._cli`:
+exit 0 on success, 1 on findings/regressions, 2 on unusable input
+(schema or baseline mismatch).
+"""

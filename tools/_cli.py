@@ -1,0 +1,54 @@
+"""Shared CLI conventions for the repo's checkers.
+
+Used by ``check_bench.py``, ``check_doc_links.py``, ``update_goldens.py``
+and ``tools.repro_lint``. Deliberately jax-free so gate scripts stay cheap
+to import.
+
+Exit-code contract (mirrored from the original ``check_bench.py``):
+
+  - ``EXIT_OK`` (0)       — clean / gate passed
+  - ``EXIT_FINDINGS`` (1) — real findings or regressions
+  - ``EXIT_SCHEMA`` (2)   — unusable input: malformed file, schema or
+    baseline mismatch. CI treats 2 as "fix the harness", not "fix the
+    code".
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+EXIT_OK = 0
+EXIT_FINDINGS = 1
+EXIT_SCHEMA = 2
+
+#: Repository root (the directory containing ``tools/``).
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: ``src/`` layout root for ``import repro``.
+SRC = os.path.join(ROOT, "src")
+
+
+class ToolError(Exception):
+    """Unusable input (malformed schema, bad baseline). Maps to exit 2."""
+
+    exit_code = EXIT_SCHEMA
+
+
+def add_src_to_path() -> None:
+    """Make ``import repro`` work when a tool is run from the repo root."""
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+
+
+def rel(path: str) -> str:
+    """Repo-relative posix path for stable finding/report output."""
+    return os.path.relpath(os.path.abspath(path), ROOT).replace(os.sep, "/")
+
+
+def run_main(fn) -> None:
+    """Run ``fn() -> int`` as a script body, mapping ToolError to exit 2."""
+    try:
+        raise SystemExit(fn())
+    except ToolError as e:
+        print(f"error: {e}", file=sys.stderr)
+        raise SystemExit(e.exit_code)

@@ -30,7 +30,13 @@ import json
 import os
 import sys
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from tools._cli import (EXIT_FINDINGS, EXIT_OK, EXIT_SCHEMA, ROOT,
+                        ToolError)
+
 DEFAULT_TOLERANCE = 0.25
 
 # the schema this gate knows how to read (kept in lockstep with
@@ -39,7 +45,7 @@ DEFAULT_TOLERANCE = 0.25
 SCHEMA_VERSION = 1
 
 
-class BenchFormatError(Exception):
+class BenchFormatError(ToolError):
     """Input that cannot be compared (exit 2), with a remedy attached."""
 
 
@@ -141,10 +147,10 @@ def main(argv=None) -> int:
                     cand_path=args.candidate, base_path=base_path)
     except BenchFormatError as e:
         print(f"check_bench: {e}", file=sys.stderr)
-        return 2
+        return EXIT_SCHEMA
     print(f"{bad} pinned row(s) regressed" if bad
           else "all pinned rows within tolerance")
-    return 1 if bad else 0
+    return EXIT_FINDINGS if bad else EXIT_OK
 
 
 if __name__ == "__main__":

@@ -20,7 +20,12 @@ import os
 import re
 import sys
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from tools._cli import EXIT_FINDINGS, EXIT_OK, ROOT, run_main
+
 DOCS = ["DESIGN.md", os.path.join("docs", "paper_map.md"), "README.md"]
 EXTS = (".py", ".md", ".yml", ".yaml", ".ini", ".json", ".toml")
 # backticked `path/to/file.ext` (optionally with a :line or trailing /)
@@ -114,10 +119,10 @@ def main() -> int:
         print(p)
     if problems:
         print(f"{len(problems)} doc reference problem(s)")
-        return 1
+        return EXIT_FINDINGS
     print("doc references OK")
-    return 0
+    return EXIT_OK
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    run_main(main)

@@ -1,0 +1,19 @@
+"""``replint`` — repo-specific static analysis proving the PRNG-lane,
+trace-safety and privacy-ledger invariants (DESIGN.md §14).
+
+Run it as ``PYTHONPATH=src python -m tools.repro_lint src/``. Three
+checker families, each a module here:
+
+- PRNG hygiene (RL101-RL104): :mod:`tools.repro_lint.prng`
+- trace safety (RL201-RL206): :mod:`tools.repro_lint.trace` (AST) and
+  :mod:`tools.repro_lint.jaxpr_scan` (lowered jaxprs)
+- ledger/registry completeness (RL301-RL304):
+  :mod:`tools.repro_lint.ledger`
+
+Intentional exceptions live in ``baseline.toml`` next to this package;
+every entry carries a reason and goes stale (exit 2) the moment the code
+it blesses changes.
+"""
+from tools.repro_lint.findings import RULES, Finding, sort_findings
+
+__all__ = ["Finding", "RULES", "sort_findings"]

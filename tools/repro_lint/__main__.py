@@ -1,0 +1,148 @@
+"""CLI driver for ``tools.repro_lint``.
+
+    PYTHONPATH=src python -m tools.repro_lint src/
+
+Exit codes follow tools/_cli.py (the check_bench.py convention): 0 clean,
+1 findings, 2 unusable input (syntax error in a scanned file, malformed
+goldens, malformed or stale baseline).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from tools._cli import (EXIT_FINDINGS, EXIT_OK, EXIT_SCHEMA, ROOT,
+                        ToolError, add_src_to_path, run_main)
+from tools.repro_lint import jaxpr_scan, ledger, prng, trace
+from tools.repro_lint.astutil import parse_file
+from tools.repro_lint.baseline import apply_baseline, load_baseline
+from tools.repro_lint.findings import RULES, sort_findings
+
+DEFAULT_BASELINE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "baseline.toml")
+
+#: path fragments where raw PRNGKey construction is sanctioned (RL102)
+SANCTIONED_PRNG = ("/launch/", "/tests/", "/examples/")
+
+TRACE_ROOTS = ("_build_cohort_core",)
+LANE_SPLIT_FNS = ("split_round_key",)
+
+
+def collect_py_files(paths):
+    out = []
+    for p in paths:
+        ap = os.path.abspath(p)
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            out.append(ap)
+        elif os.path.isdir(ap):
+            for dirpath, dirs, names in sorted(os.walk(ap)):
+                dirs[:] = sorted(d for d in dirs if d != "__pycache__")
+                out.extend(os.path.join(dirpath, n)
+                           for n in sorted(names) if n.endswith(".py"))
+        else:
+            raise ToolError(f"no such file or directory: {p}")
+    return out
+
+
+def run_ast_checks(files, sanctioned_prng=SANCTIONED_PRNG,
+                   trace_roots=TRACE_ROOTS,
+                   lane_split_fns=LANE_SPLIT_FNS):
+    """All pure-AST rules over already-parsed files (library entry point —
+    tests/test_replint.py drives fixture trees through this)."""
+    findings = []
+    for pf in files:
+        findings += prng.check_key_reuse(pf)
+        findings += prng.check_raw_prngkey(pf, sanctioned_prng)
+        findings += prng.check_lane_literals(pf, lane_split_fns)
+        findings += trace.check_file_trace(pf)
+    findings += prng.check_stream_tags(files)
+    findings += trace.check_reachable(files, trace_roots)
+    findings += ledger.check_aircomp_charge(files)
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description="PFELS invariant lint (DESIGN.md §14)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs to scan (default: src/)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="allowlist TOML (default: %(default)s)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report baselined findings too")
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the RL206 lowered-round scan (needs jax)")
+    ap.add_argument("--no-registry", action="store_true",
+                    help="skip RL301-RL303 (needs importing repro)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid in sorted(RULES):
+            slug, desc = RULES[rid]
+            print(f"{rid}  {slug:<20} {desc}")
+        return EXIT_OK
+
+    paths = args.paths or [os.path.join(ROOT, "src")]
+    files = []
+    for ap_ in collect_py_files(paths):
+        rel = os.path.relpath(ap_, ROOT)
+        if rel.startswith(".."):
+            rel = ap_
+        try:
+            files.append(parse_file(ap_, rel))
+        except SyntaxError as e:
+            raise ToolError(f"cannot parse {rel}: {e}")
+
+    findings = run_ast_checks(files)
+
+    if not args.no_registry:
+        add_src_to_path()
+        err = ledger.check_goldens_schema(ROOT)
+        if err:
+            raise ToolError(err)
+        findings += ledger.check_registries(ROOT)
+        findings += ledger.check_coverage(ROOT)
+
+    if not args.no_jaxpr:
+        add_src_to_path()
+        findings += jaxpr_scan.lint_lowered_rounds()
+
+    suppressed = []
+    if not args.no_baseline and os.path.exists(args.baseline):
+        entries = load_baseline(args.baseline)
+        findings, suppressed, stale = apply_baseline(findings, entries)
+        if stale:
+            lines = "\n".join("  " + e.render() for e in stale)
+            raise ToolError(
+                "stale baseline entries (match no current finding — fix "
+                f"the baseline):\n{lines}")
+
+    findings = sort_findings(findings)
+    for f in findings:
+        print(f.render())
+
+    n_files = len(files)
+    if findings:
+        print(f"\nreplint: {len(findings)} finding(s) in {n_files} "
+              f"file(s) ({len(suppressed)} baselined)", file=sys.stderr)
+        return EXIT_FINDINGS
+    print(f"replint: clean ({n_files} files scanned, "
+          f"{len(suppressed)} baselined)", file=sys.stderr)
+    return EXIT_OK
+
+
+if __name__ == "__main__":
+    run_main(main)
+
+
+# re-exported for tests
+__all__ = ["main", "run_ast_checks", "collect_py_files",
+           "EXIT_OK", "EXIT_FINDINGS", "EXIT_SCHEMA"]

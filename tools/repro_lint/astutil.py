@@ -1,0 +1,123 @@
+"""Shared AST plumbing: parsed-file records, import-alias resolution, and
+dotted-name reconstruction.
+
+All checkers resolve call targets through :func:`dotted_name` so that
+``import jax.numpy as jnp; jnp.nonzero(x)`` and
+``from jax import numpy; numpy.nonzero(x)`` both canonicalize to
+``jax.numpy.nonzero``.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class ParsedFile:
+    path: str                      # repo-relative posix path
+    tree: ast.Module
+    lines: List[str]               # source lines (for Finding.source)
+    imports: Dict[str, str] = field(default_factory=dict)
+
+    def src(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+
+def parse_file(abspath: str, relpath: str) -> ParsedFile:
+    with open(abspath, "r", encoding="utf-8") as f:
+        text = f.read()
+    tree = ast.parse(text, filename=relpath)
+    pf = ParsedFile(path=relpath.replace(os.sep, "/"), tree=tree,
+                    lines=text.splitlines())
+    pf.imports = collect_imports(tree)
+    return pf
+
+
+def collect_imports(tree: ast.Module) -> Dict[str, str]:
+    """Map local alias -> canonical dotted module/name.
+
+    ``import jax.numpy as jnp``      -> {"jnp": "jax.numpy"}
+    ``import numpy``                 -> {"numpy": "numpy"}
+    ``from jax import random as jr`` -> {"jr": "jax.random"}
+    ``from jax.random import split`` -> {"split": "jax.random.split"}
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            if node.level or not node.module:
+                continue   # relative imports stay unresolved
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def dotted_name(node: ast.AST, imports: Dict[str, str]) -> Optional[str]:
+    """Canonical dotted name of a Name/Attribute chain, alias-resolved.
+
+    Returns None for anything that is not a plain attribute chain rooted at
+    a Name (e.g. calls on call results)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    root = imports.get(node.id, node.id)
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def call_name(call: ast.Call, imports: Dict[str, str]) -> Optional[str]:
+    return dotted_name(call.func, imports)
+
+
+def terminal(dotted: Optional[str]) -> str:
+    return dotted.rsplit(".", 1)[-1] if dotted else ""
+
+
+def iter_functions(tree: ast.Module):
+    """Yield (qualname, node) for every def/async def, including methods
+    and nested functions. Qualnames use dots: ``Trainer._spend``,
+    ``_build_cohort_core.cohort_core``."""
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{child.name}"
+                yield q, child
+                yield from walk(child, q + ".")
+            elif isinstance(child, ast.ClassDef):
+                yield from walk(child, f"{prefix}{child.name}.")
+            else:
+                yield from walk(child, prefix)
+
+    yield from walk(tree, "")
+
+
+def walk_own(fn: ast.AST):
+    """Walk a node without descending into nested defs/lambdas — those are
+    scanned as their own units, so this prevents double-reporting."""
+    stack = list(ast.iter_child_nodes(fn))
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def norm(name: str) -> str:
+    """Normalize an identifier for call-graph matching: strip leading
+    underscores so ``self._cohort_core`` matches ``cohort_core``."""
+    return name.lstrip("_")

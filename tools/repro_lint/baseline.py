@@ -1,0 +1,110 @@
+"""Baseline (allowlist) handling for ``tools.repro_lint``.
+
+``baseline.toml`` holds the *reviewed, intentional* exceptions — each
+entry must say why. An entry matches a finding by rule + path, optionally
+narrowed by a ``match`` substring of the flagged source line and/or a
+``symbol`` (enclosing function or registry name). Schema errors and stale
+entries (matching nothing — the violation was fixed or the line moved)
+are exit-2 conditions: a baseline that silently rots is worse than none.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+from tools._cli import ToolError
+from tools.repro_lint.findings import RULES, Finding
+
+try:
+    import tomllib as _toml          # py311+
+except ImportError:                  # pragma: no cover - py310 path
+    import tomli as _toml
+
+_ALLOWED_KEYS = {"rule", "path", "match", "symbol", "reason"}
+
+
+class BaselineError(ToolError):
+    """Malformed or stale baseline — exit 2."""
+
+
+@dataclass(frozen=True)
+class BaselineEntry:
+    rule: str
+    path: str
+    reason: str
+    match: str = ""
+    symbol: str = ""
+
+    def matches(self, f: Finding) -> bool:
+        if f.rule != self.rule or f.path != self.path:
+            return False
+        if self.match and self.match not in (f.source or ""):
+            return False
+        if self.symbol and self.symbol != f.symbol:
+            return False
+        return True
+
+    def render(self) -> str:
+        extra = "".join(
+            f" {k}={v!r}" for k, v in
+            (("match", self.match), ("symbol", self.symbol)) if v)
+        return f"[{self.rule} path={self.path!r}{extra}]"
+
+
+def load_baseline(path: str) -> List[BaselineEntry]:
+    try:
+        with open(path, "rb") as f:
+            data = _toml.load(f)
+    except OSError as e:
+        raise BaselineError(f"baseline unreadable: {e}")
+    except _toml.TOMLDecodeError as e:
+        raise BaselineError(f"baseline is not valid TOML: {e}")
+
+    raw = data.pop("entry", [])
+    if data:
+        raise BaselineError(
+            f"unknown top-level baseline keys {sorted(data)}; entries go "
+            "in [[entry]] tables")
+    if not isinstance(raw, list):
+        raise BaselineError("[[entry]] must be an array of tables")
+
+    entries: List[BaselineEntry] = []
+    for i, item in enumerate(raw):
+        where = f"baseline entry #{i + 1}"
+        if not isinstance(item, dict):
+            raise BaselineError(f"{where}: not a table")
+        unknown = set(item) - _ALLOWED_KEYS
+        if unknown:
+            raise BaselineError(f"{where}: unknown keys {sorted(unknown)}")
+        for req in ("rule", "path", "reason"):
+            if not isinstance(item.get(req), str) or not item[req].strip():
+                raise BaselineError(
+                    f"{where}: missing/empty required key '{req}'")
+        if item["rule"] not in RULES:
+            raise BaselineError(
+                f"{where}: unknown rule id {item['rule']!r}")
+        entries.append(BaselineEntry(
+            rule=item["rule"], path=item["path"], reason=item["reason"],
+            match=item.get("match", ""), symbol=item.get("symbol", "")))
+    return entries
+
+
+def apply_baseline(findings: List[Finding],
+                   entries: List[BaselineEntry]
+                   ) -> Tuple[List[Finding], List[Finding],
+                              List[BaselineEntry]]:
+    """Split findings into (kept, suppressed); also return stale entries
+    that matched nothing (an exit-2 condition for the caller)."""
+    kept: List[Finding] = []
+    suppressed: List[Finding] = []
+    used = [False] * len(entries)
+    for f in findings:
+        hit = False
+        for i, e in enumerate(entries):
+            if e.matches(f):
+                used[i] = True
+                hit = True
+        (suppressed if hit else kept).append(
+            f.as_baselined() if hit else f)
+    stale = [e for i, e in enumerate(entries) if not used[i]]
+    return kept, suppressed, stale

@@ -1,0 +1,143 @@
+"""Name-based over-approximating call graph.
+
+Resolution is intentionally coarse (no types, no dataflow): a call edge is
+drawn from a function to every known function whose *normalized* name
+matches the callee (leading underscores stripped, so ``self._cohort_core``
+reaches ``cohort_core``). Two extras make this useful on this codebase:
+
+- nested defs are indexed as their own nodes (closures inside
+  ``_build_cohort_core`` are graph nodes reachable from it);
+- dataclass-style hook wiring is aliased: ``Algorithm(design_beta=f)``
+  registers ``design_beta -> f`` so later ``alg.design_beta(...)`` calls
+  resolve to every hook implementation wired under that keyword.
+
+Over-approximation is the right failure mode for a lint: it can only add
+reachable code, never hide it.
+"""
+from __future__ import annotations
+
+import ast
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Set, Tuple
+
+from tools.repro_lint.astutil import (ParsedFile, call_name, iter_functions,
+                                      norm, terminal)
+
+
+@dataclass
+class FuncNode:
+    key: str               # "<path>:<qualname>"
+    path: str
+    qualname: str
+    node: ast.AST
+    pf: ParsedFile
+    calls: List[Tuple[str, int]] = field(default_factory=list)
+
+
+@dataclass
+class CallGraph:
+    nodes: Dict[str, FuncNode]
+    by_name: Dict[str, List[str]]            # normalized name -> node keys
+    aliases: Dict[str, Set[str]]             # hook keyword -> node keys
+
+    def targets(self, called: str, from_path: str) -> List[str]:
+        """Node keys a normalized callee name may resolve to. Same-module
+        definitions win when they exist (shadowing)."""
+        cands = self.by_name.get(called, [])
+        cands = cands + sorted(self.aliases.get(called, ()))
+        local = [k for k in cands if self.nodes[k].path == from_path]
+        return local if local else cands
+
+    def reachable(self, root_names: Set[str]) -> Set[str]:
+        """BFS over the edge relation from every node whose terminal
+        qualname component matches a root name."""
+        roots = [k for k, n in self.nodes.items()
+                 if norm(n.qualname.rsplit(".", 1)[-1]) in
+                 {norm(r) for r in root_names}]
+        seen: Set[str] = set(roots)
+        q = deque(roots)
+        while q:
+            key = q.popleft()
+            fn = self.nodes[key]
+            for called, _lineno in fn.calls:
+                for tgt in self.targets(called, fn.path):
+                    if tgt not in seen:
+                        seen.add(tgt)
+                        q.append(tgt)
+        return seen
+
+
+#: ubiquitous ndarray/container method names that must not resolve to
+#: same-named repo functions (``x.flatten()`` is not ``checkpoint._flatten``)
+_METHOD_STOPLIST = {
+    "flatten", "ravel", "reshape", "astype", "copy", "tolist", "sum",
+    "mean", "get", "items", "keys", "values", "append", "update",
+}
+
+
+def _callee_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return norm(f.id)
+    if isinstance(f, ast.Attribute):
+        name = norm(f.attr)
+        return "" if name in _METHOD_STOPLIST else name
+    return ""
+
+
+def build_graph(files: List[ParsedFile]) -> CallGraph:
+    nodes: Dict[str, FuncNode] = {}
+    by_name: Dict[str, List[str]] = {}
+    aliases: Dict[str, Set[str]] = {}
+    # name of module-level def per file, for hook-alias resolution
+    module_defs: Dict[str, Dict[str, str]] = {}
+
+    for pf in files:
+        module_defs[pf.path] = {}
+        for qual, fn in iter_functions(pf.tree):
+            key = f"{pf.path}:{qual}"
+            fnode = FuncNode(key=key, path=pf.path, qualname=qual, node=fn,
+                             pf=pf)
+            nodes[key] = fnode
+            by_name.setdefault(norm(fn.name), []).append(key)
+            if "." not in qual:
+                module_defs[pf.path][fn.name] = key
+
+    for pf in files:
+        for qual, fn in iter_functions(pf.tree):
+            key = f"{pf.path}:{qual}"
+            fnode = nodes[key]
+            # a builder always "reaches" the closures it defines
+            for child in ast.iter_child_nodes(fn):
+                if isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                    fnode.calls.append((norm(child.name), child.lineno))
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    name = _callee_name(node)
+                    if name:
+                        fnode.calls.append((name, node.lineno))
+                # bare function references (passed as values) also count as
+                # potential edges: rounds-builders return/forward closures.
+                elif isinstance(node, ast.Name) and \
+                        isinstance(node.ctx, ast.Load) and \
+                        norm(node.id) in by_name:
+                    fnode.calls.append((norm(node.id), node.lineno))
+
+        # hook aliasing: SomeRegistryRecord(hook_name=local_def, ...)
+        for node in ast.walk(pf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg is None:
+                    continue
+                if isinstance(kw.value, ast.Name):
+                    tgt = module_defs[pf.path].get(kw.value.id)
+                    if tgt is not None:
+                        aliases.setdefault(norm(kw.arg), set()).add(tgt)
+
+    return CallGraph(nodes=nodes, by_name=by_name, aliases=aliases)
+
+
+__all__ = ["CallGraph", "FuncNode", "build_graph", "call_name", "terminal"]

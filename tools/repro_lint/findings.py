@@ -1,0 +1,83 @@
+"""Finding record and the rule table for ``tools.repro_lint``.
+
+Rule IDs are stable identifiers: baselines (``baseline.toml``), tests and
+DESIGN.md §14 all key on them. Never renumber; retire by deleting.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+#: rule id -> (slug, one-line description). Kept in sync with DESIGN.md §14.
+RULES = {
+    # -- PRNG hygiene ------------------------------------------------------
+    "RL101": ("prng-key-reuse",
+              "key consumed by >=2 random draws without an interleaving "
+              "split/fold_in"),
+    "RL102": ("raw-prngkey",
+              "raw PRNGKey()/key() construction outside sanctioned sites "
+              "(launch/, tests/, examples/)"),
+    "RL103": ("lane-literal",
+              "integer lane subscript on a split_round_key result; use "
+              "ROUND_KEY_LANES[\"...\"]"),
+    "RL104": ("dup-stream-tag",
+              "duplicate fold_in stream tag across modules, or a magic "
+              "literal shadowing a *TAG constant"),
+    # -- trace safety ------------------------------------------------------
+    "RL201": ("traced-branch",
+              "Python if/while/ternary on a traced value inside "
+              "cohort-core-reachable code"),
+    "RL202": ("host-coercion",
+              ".item()/float()/int()/bool() on a traced value inside "
+              "cohort-core-reachable code"),
+    "RL203": ("dynamic-shape",
+              "jnp.nonzero/flatnonzero/argwhere/unique without size=, or "
+              "1-arg jnp.where"),
+    "RL204": ("bool-mask-index",
+              "boolean-mask indexing (data-dependent shape under jit)"),
+    "RL205": ("host-callback",
+              "device_get/callback/numpy host op inside "
+              "cohort-core-reachable code"),
+    "RL206": ("jaxpr-forbidden",
+              "forbidden primitive (callback/host transfer) or non-static "
+              "shape found in a lowered round jaxpr"),
+    # -- ledger / registry completeness ------------------------------------
+    "RL301": ("alg-no-spend",
+              "registered algorithm does not define privacy_spend"),
+    "RL302": ("comp-no-sensitivity",
+              "registered compressor does not declare a sensitivity factor"),
+    "RL303": ("combo-unreachable",
+              "registered algorithm/channel/compressor name not reachable "
+              "by any test or golden row"),
+    "RL304": ("uncharged-aircomp",
+              "call path reaches aircomp_aggregate* without a ledger "
+              "charge in the same round body"),
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violation. ``source`` is the stripped flagged line (the target of
+    a baseline entry's ``match``); ``symbol`` is the enclosing function
+    qualname or registry entry name when one exists."""
+
+    rule: str
+    path: str              # repo-relative posix path (or "<jaxpr:...>")
+    line: int
+    col: int
+    message: str
+    source: str = ""
+    symbol: str = ""
+    baselined: bool = field(default=False, compare=False)
+
+    def render(self) -> str:
+        slug = RULES[self.rule][0]
+        loc = f"{self.path}:{self.line}:{self.col}"
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{loc}: {self.rule} ({slug}){sym} {self.message}"
+
+    def as_baselined(self) -> "Finding":
+        return replace(self, baselined=True)
+
+
+def sort_findings(findings):
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))

@@ -1,0 +1,237 @@
+"""Ledger / registry completeness checkers (RL301-RL304).
+
+These close the accounting loop that PAPER.md Thm 3 / Thm 5 depend on:
+an algorithm without ``privacy_spend`` silently trains with a zero ledger
+(RL301), a compressor without a declared sensitivity factor breaks the
+Lemma-2 bound the epsilon charge is computed from (RL302), a registry
+entry no test or golden row ever names is an unverified DP surface
+(RL303), and a call path that aggregates over the air without charging
+``_dp_epsilon_spend`` is exactly the accounting drift arXiv 2304.04164
+warns about (RL304).
+
+RL301-303 introspect the *live* registries (importing ``repro``); RL304 is
+pure AST over the call graph so it also works on fixture trees.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import List, Optional
+
+from tools.repro_lint.astutil import ParsedFile
+from tools.repro_lint.callgraph import CallGraph, build_graph
+from tools.repro_lint.findings import Finding
+
+#: callee names (normalized) that constitute a ledger charge
+CHARGE_NAMES = {
+    "dp_epsilon_spend", "ledger_spend", "round_epsilon_spent",
+    "privacy_spend", "spend",
+}
+
+#: callee-name prefix that constitutes an over-the-air aggregation
+AIRCOMP_PREFIX = "aircomp_aggregate"
+
+
+def _registration_line(pf_lines: List[str], name: str) -> int:
+    pat = re.compile(r'["\']' + re.escape(name) + r'["\']')
+    for i, line in enumerate(pf_lines, start=1):
+        if "register" in line and pat.search(line):
+            return i
+    for i, line in enumerate(pf_lines, start=1):
+        if pat.search(line):
+            return i
+    return 0
+
+
+def _read_lines(root: str, rel: str) -> List[str]:
+    try:
+        with open(os.path.join(root, rel), encoding="utf-8") as f:
+            return f.read().splitlines()
+    except OSError:
+        return []
+
+
+def check_registries(root: str, algorithms=None,
+                     compressors=None) -> List[Finding]:
+    """RL301 + RL302 against the live registries.
+
+    ``algorithms``/``compressors`` may be injected as {name: record} dicts
+    for tests; by default the real ``repro`` registries are imported.
+    """
+    out: List[Finding] = []
+    if algorithms is None:
+        from repro.fl import algorithms as _alg
+        algorithms = {n: _alg.get_algorithm(n)
+                      for n in _alg.list_algorithms()}
+        alg_path = "src/repro/fl/algorithms.py"
+    else:
+        alg_path = "<registry:algorithms>"
+    if compressors is None:
+        from repro.core.compressors import base as _cb
+        compressors = {n: _cb.get_compressor(n)
+                       for n in _cb.list_compressors()}
+        comp_path = "src/repro/core/compressors/base.py"
+    else:
+        comp_path = "<registry:compressors>"
+
+    alg_lines = _read_lines(root, alg_path)
+    for name in sorted(algorithms):
+        if getattr(algorithms[name], "privacy_spend", None) is None:
+            out.append(Finding(
+                rule="RL301", path=alg_path,
+                line=_registration_line(alg_lines, name), col=0,
+                message=(f"algorithm '{name}' defines no privacy_spend "
+                         "hook; its rounds train with an uncharged "
+                         "ledger"),
+                symbol=name))
+    comp_lines = _read_lines(root, comp_path)
+    for name in sorted(compressors):
+        if getattr(compressors[name], "sensitivity", None) is None:
+            out.append(Finding(
+                rule="RL302", path=comp_path,
+                line=_registration_line(comp_lines, name), col=0,
+                message=(f"compressor '{name}' declares no sensitivity "
+                         "factor; the Lemma-2 bound cannot be scaled"),
+                symbol=name))
+    return out
+
+
+def check_coverage(root: str, goldens_rel: str = None,
+                   tests_rel: str = "tests", names: dict = None
+                   ) -> List[Finding]:
+    """RL303: every registered algorithm/channel/compressor name must be
+    reachable by a test or golden row.
+
+    ``names`` may inject {kind: {name: defining_path}} for tests; the
+    default reads the live registries. The haystack is the goldens JSON
+    (case names + meta) plus the text of every ``tests_rel/*.py``.
+    """
+    if goldens_rel is None:
+        goldens_rel = os.path.join("tests", "goldens",
+                                   "golden_digests.json")
+    if names is None:
+        from repro.core.channels import base as _ch
+        from repro.core.compressors import base as _cb
+        from repro.fl import algorithms as _alg
+        names = {
+            "algorithm": {n: "src/repro/fl/algorithms.py"
+                          for n in _alg.list_algorithms()},
+            "channel": {n: "src/repro/core/channels/base.py"
+                        for n in _ch.list_channel_models()},
+            "compressor": {n: "src/repro/core/compressors/base.py"
+                           for n in _cb.list_compressors()},
+        }
+
+    hay_parts: List[str] = []
+    gpath = os.path.join(root, goldens_rel)
+    try:
+        with open(gpath, encoding="utf-8") as f:
+            hay_parts.append(f.read())
+    except OSError:
+        pass
+    tdir = os.path.join(root, tests_rel)
+    if os.path.isdir(tdir):
+        for dirpath, _dirs, fnames in sorted(os.walk(tdir)):
+            for fname in sorted(fnames):
+                if fname.endswith(".py"):
+                    with open(os.path.join(dirpath, fname),
+                              encoding="utf-8") as f:
+                        hay_parts.append(f.read())
+    hay = "\n".join(hay_parts)
+
+    out: List[Finding] = []
+    for kind in sorted(names):
+        defs = names[kind]
+        for name in sorted(defs):
+            if not re.search(r"\b" + re.escape(name) + r"\b", hay):
+                lines = _read_lines(root, defs[name])
+                out.append(Finding(
+                    rule="RL303", path=defs[name],
+                    line=_registration_line(lines, name), col=0,
+                    message=(f"registered {kind} '{name}' is named by no "
+                             f"test and no golden row in {goldens_rel}; "
+                             "its DP surface is unverified"),
+                    symbol=name))
+    return out
+
+
+def check_goldens_schema(root: str, goldens_rel: str = None) -> Optional[str]:
+    """Return an error string if the goldens file is unusable (exit-2
+    condition), else None."""
+    if goldens_rel is None:
+        goldens_rel = os.path.join("tests", "goldens",
+                                   "golden_digests.json")
+    gpath = os.path.join(root, goldens_rel)
+    try:
+        with open(gpath, encoding="utf-8") as f:
+            data = json.load(f)
+    except OSError as e:
+        return f"goldens file unreadable: {e}"
+    except json.JSONDecodeError as e:
+        return f"goldens file is not valid JSON: {e}"
+    if not isinstance(data, dict) or "cases" not in data or \
+            not isinstance(data["cases"], dict):
+        return f"goldens file {goldens_rel} has no 'cases' table"
+    return None
+
+
+def check_aircomp_charge(files: List[ParsedFile],
+                         graph: CallGraph = None) -> List[Finding]:
+    """RL304: no call-graph root may reach ``aircomp_aggregate*`` without
+    also reaching a ledger charge.
+
+    Roots are nodes nothing else calls. The aggregation module itself is
+    exempt (it *implements* the primitive; the charge lives with the
+    caller, see DESIGN.md §8).
+    """
+    if graph is None:
+        graph = build_graph(files)
+
+    callees_of = {k: {c for c, _ in n.calls} for k, n in graph.nodes.items()}
+    called: set = set()
+    for key, fn in graph.nodes.items():
+        for c in callees_of[key]:
+            for tgt in graph.targets(c, fn.path):
+                if tgt != key:
+                    called.add(tgt)
+
+    def reaches(start: str, pred) -> bool:
+        seen = {start}
+        stack = [start]
+        while stack:
+            key = stack.pop()
+            fn = graph.nodes[key]
+            for c in callees_of[key]:
+                if pred(c):
+                    return True
+                for tgt in graph.targets(c, fn.path):
+                    if tgt not in seen:
+                        seen.add(tgt)
+                        stack.append(tgt)
+        return False
+
+    def is_aircomp(name: str) -> bool:
+        return name.startswith(AIRCOMP_PREFIX)
+
+    def is_charge(name: str) -> bool:
+        return name in CHARGE_NAMES
+
+    out: List[Finding] = []
+    for key in sorted(graph.nodes):
+        fn = graph.nodes[key]
+        if key in called:
+            continue
+        if fn.path.endswith("core/aggregation.py"):
+            continue
+        if not reaches(key, is_aircomp):
+            continue
+        if reaches(key, is_charge):
+            continue
+        out.append(Finding(
+            rule="RL304", path=fn.path, line=fn.node.lineno, col=0,
+            message=(f"call path rooted at {fn.qualname} reaches "
+                     f"{AIRCOMP_PREFIX}* but never charges the ledger "
+                     "(_dp_epsilon_spend / ledger_spend)"),
+            source=fn.pf.src(fn.node.lineno), symbol=fn.qualname))
+    return out

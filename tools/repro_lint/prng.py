@@ -1,0 +1,399 @@
+"""PRNG hygiene checkers (RL101-RL104).
+
+The PFELS DP claim (PAPER.md Thm 3) only holds if every random draw comes
+from a distinct PRNG stream: the 7-lane ``ROUND_KEY_LANES`` contract in
+``src/repro/fl/rounds.py`` plus per-subsystem ``fold_in`` stream tags.
+These rules catch the silent failure modes: a key consumed twice (RL101),
+an ad-hoc root key smuggled into library code (RL102), a lane addressed by
+magic integer so a contract change silently re-wires streams (RL103), and
+two subsystems folding the same tag into the same lane (RL104).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Tuple
+
+from tools.repro_lint.astutil import (ParsedFile, call_name, iter_functions,
+                                      terminal)
+from tools.repro_lint.findings import Finding
+
+#: jax.random.* callees that derive/construct keys rather than draw from
+#: them — consuming a key through these is not a "draw" for RL101.
+_KEY_DERIVERS = {
+    "split", "fold_in", "clone", "PRNGKey", "key", "key_data",
+    "wrap_key_data", "key_impl",
+}
+
+_KEYISH_PARAM = re.compile(r"(key|rng)s?$|^ks$")
+
+_TAG_CONST = re.compile(r"[A-Za-z0-9_]*TAG$")
+
+#: Sentinel for "not inside any loop" in the RL101 visitor.
+_NOT_IN_LOOP = frozenset()
+
+
+def _is_random_call(call: ast.Call, imports) -> Optional[str]:
+    """Return the jax.random.* terminal name if this call is a random op."""
+    dotted = call_name(call, imports)
+    if dotted and dotted.startswith("jax.random."):
+        return terminal(dotted)
+    return None
+
+
+def _key_expr_id(node: ast.AST) -> Optional[Tuple]:
+    """Hashable identity for a key expression: a Name or a constant-ish
+    subscript of a Name (``ks[3]``, ``ks[LANES["gains"]]``)."""
+    if isinstance(node, ast.Name):
+        return ("n", node.id)
+    if isinstance(node, ast.Subscript) and isinstance(node.value, ast.Name):
+        try:
+            sl = ast.unparse(node.slice)
+        except Exception:
+            return None
+        return ("s", node.value.id, sl)
+    return None
+
+
+def _base_name(key_id: Tuple) -> str:
+    return key_id[1]
+
+
+class _KeyReuseVisitor:
+    """Per-function RL101 scan.
+
+    Tracks, per key identity, the list of draw events seen since the last
+    reassignment. Two draws conflict unless they live in mutually exclusive
+    arms of the same ``if``. A draw inside a loop whose key is not
+    re-derived in that loop body conflicts with itself.
+
+    ``path`` is the branch context: a tuple of (if-node-id, arm) entries.
+    """
+
+    def __init__(self, pf: ParsedFile, qualname: str):
+        self.pf = pf
+        self.qualname = qualname
+        self.findings: List[Finding] = []
+        # key id -> list of (branch_path, lineno, op)
+        self.draws: Dict[Tuple, List[Tuple[tuple, int, str]]] = {}
+        self.key_vars: set = set()
+
+    # -- helpers -----------------------------------------------------------
+
+    def _reset(self, name: str):
+        for kid in list(self.draws):
+            if _base_name(kid) == name:
+                del self.draws[kid]
+
+    @staticmethod
+    def _exclusive(a: tuple, b: tuple) -> bool:
+        for ea, eb in zip(a, b):
+            if ea[0] == eb[0] and ea[1] != eb[1]:
+                return True
+            if ea != eb:
+                return False
+        return False
+
+    def _record_draw(self, kid: Tuple, path: tuple, lineno: int, op: str,
+                     twice: bool):
+        prior = self.draws.setdefault(kid, [])
+        events = [(path, lineno, op)] * (2 if twice else 1)
+        for ev in events:
+            for (ppath, plineno, pop) in prior:
+                if not self._exclusive(ppath, ev[0]):
+                    base = (f"key `{self._render(kid)}` drawn by "
+                            f"jax.random.{op} at line {lineno}")
+                    if plineno == lineno and pop == op:
+                        msg = (base + " inside a loop without re-splitting "
+                               "per iteration")
+                    else:
+                        msg = (base + f" was already consumed by "
+                               f"jax.random.{pop} at line {plineno} with no "
+                               "interleaving split/fold_in")
+                    self.findings.append(Finding(
+                        rule="RL101", path=self.pf.path, line=lineno,
+                        col=0, message=msg, source=self.pf.src(lineno),
+                        symbol=self.qualname))
+                    prior.clear()
+                    break
+            prior.append(ev)
+
+    @staticmethod
+    def _render(kid: Tuple) -> str:
+        return kid[1] if kid[0] == "n" else f"{kid[1]}[{kid[2]}]"
+
+    def _is_tracked(self, kid: Tuple) -> bool:
+        return _base_name(kid) in self.key_vars
+
+    # -- driver ------------------------------------------------------------
+
+    def run(self, fn: ast.AST):
+        args = getattr(fn, "args", None)
+        if args is not None:
+            for a in (args.posonlyargs + args.args + args.kwonlyargs
+                      + ([args.vararg] if args.vararg else [])
+                      + ([args.kwarg] if args.kwarg else [])):
+                if a and _KEYISH_PARAM.search(a.arg):
+                    self.key_vars.add(a.arg)
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        self._visit_stmts(body, (), loop_assigned=_NOT_IN_LOOP)
+        return self.findings
+
+    def _assigned_names(self, stmts) -> set:
+        out = set()
+        for node in stmts:
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                                    ast.NamedExpr)):
+                    targets = (sub.targets if isinstance(sub, ast.Assign)
+                               else [sub.target])
+                    for t in targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                out.add(n.id)
+                elif isinstance(n := sub, ast.For):
+                    for nn in ast.walk(n.target):
+                        if isinstance(nn, ast.Name):
+                            out.add(nn.id)
+        return out
+
+    def _visit_stmts(self, stmts, path, loop_assigned):
+        for stmt in stmts:
+            self._visit_stmt(stmt, path, loop_assigned)
+
+    def _visit_stmt(self, stmt, path, loop_assigned):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return   # nested scopes are scanned as their own functions
+        if isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test, path, loop_assigned)
+            nid = id(stmt)
+            self._visit_stmts(stmt.body, path + ((nid, 0),), loop_assigned)
+            self._visit_stmts(stmt.orelse, path + ((nid, 1),), loop_assigned)
+            return
+        if isinstance(stmt, (ast.For, ast.While)):
+            outer = set() if loop_assigned is _NOT_IN_LOOP else loop_assigned
+            if isinstance(stmt, ast.For):
+                self._scan_expr(stmt.iter, path, loop_assigned)
+                for n in ast.walk(stmt.target):
+                    if isinstance(n, ast.Name):
+                        self._reset(n.id)
+                inner = outer | self._assigned_names(stmt.body) | {
+                    n.id for n in ast.walk(stmt.target)
+                    if isinstance(n, ast.Name)}
+            else:
+                self._scan_expr(stmt.test, path, loop_assigned)
+                inner = outer | self._assigned_names(stmt.body)
+            self._visit_stmts(stmt.body, path, loop_assigned=inner)
+            self._visit_stmts(stmt.orelse, path, loop_assigned)
+            return
+        if isinstance(stmt, (ast.Try,)):
+            self._visit_stmts(stmt.body, path, loop_assigned)
+            for h in stmt.handlers:
+                self._visit_stmts(h.body, path, loop_assigned)
+            self._visit_stmts(stmt.orelse, path, loop_assigned)
+            self._visit_stmts(stmt.finalbody, path, loop_assigned)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._scan_expr(item.context_expr, path, loop_assigned)
+            self._visit_stmts(stmt.body, path, loop_assigned)
+            return
+        # leaf statement: scan expressions, then apply reassignments
+        self._scan_expr(stmt, path, loop_assigned)
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                             ast.NamedExpr)):
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            derives = self._value_derives_key(stmt)
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        self._reset(n.id)
+                        if derives:
+                            self.key_vars.add(n.id)
+
+    def _value_derives_key(self, stmt) -> bool:
+        value = getattr(stmt, "value", None)
+        if value is None:
+            return False
+        for node in ast.walk(value):
+            if isinstance(node, ast.Call):
+                op = _is_random_call(node, self.pf.imports)
+                if op in _KEY_DERIVERS:
+                    return True
+                dotted = call_name(node, self.pf.imports)
+                if terminal(dotted) == "split_round_key":
+                    return True
+        return False
+
+    def _scan_expr(self, stmt, path, loop_assigned):
+        for node in ast.walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            op = _is_random_call(node, self.pf.imports)
+            if op is None or op in _KEY_DERIVERS or not node.args:
+                continue
+            kid = _key_expr_id(node.args[0])
+            if kid is None or not self._is_tracked(kid):
+                continue
+            # Inside a loop, a draw on a key that the loop body never
+            # re-derives repeats the same stream every iteration: record it
+            # twice so it conflicts with itself.
+            twice = (loop_assigned is not _NOT_IN_LOOP
+                     and _base_name(kid) not in loop_assigned)
+            self._record_draw(kid, path, node.lineno, op, twice)
+
+
+def check_key_reuse(pf: ParsedFile) -> List[Finding]:
+    """RL101 over every function in the file (module body excluded: keys at
+    module scope are flagged by RL102 instead)."""
+    out: List[Finding] = []
+    for qual, fn in iter_functions(pf.tree):
+        v = _KeyReuseVisitor(pf, qual)
+        out.extend(v.run(fn))
+    return out
+
+
+def check_raw_prngkey(pf: ParsedFile, sanctioned) -> List[Finding]:
+    """RL102: raw PRNGKey()/key() construction outside sanctioned dirs."""
+    p = "/" + pf.path
+    if any(frag in p for frag in sanctioned):
+        return []
+    func_of = {}
+    for qual, fn in iter_functions(pf.tree):
+        for node in ast.walk(fn):
+            func_of[id(node)] = qual
+    out = []
+    for node in ast.walk(pf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = call_name(node, pf.imports)
+        if dotted in ("jax.random.PRNGKey", "jax.random.key"):
+            out.append(Finding(
+                rule="RL102", path=pf.path, line=node.lineno,
+                col=node.col_offset,
+                message=(f"raw {terminal(dotted)}() outside sanctioned "
+                         "sites; thread a key from the caller instead"),
+                source=pf.src(node.lineno),
+                symbol=func_of.get(id(node), "<module>")))
+    return out
+
+
+#: variable names that by repo convention hold the split_round_key result
+#: even when it arrives as a parameter (the lane tuple is threaded through
+#: closures and lambdas as ``ks``)
+_LANE_VAR_NAMES = {"ks"}
+
+
+def check_lane_literals(pf: ParsedFile, lane_split_fns) -> List[Finding]:
+    """RL103: integer subscripts on a split_round_key result.
+
+    Lane vars are (a) any variable assigned from ``split_round_key(...)``
+    anywhere in the file, and (b) — only in files that themselves name
+    ``split_round_key``/``ROUND_KEY_LANES``, i.e. the round plumbing —
+    the conventional ``ks`` name, which the builders thread through
+    closures and lambdas as a parameter. Model-init code that happens to
+    call its own split result ``ks`` is out of scope."""
+    in_lane_code = any(
+        isinstance(n, ast.Name)
+        and n.id in ("split_round_key", "ROUND_KEY_LANES")
+        for n in ast.walk(pf.tree)) or any(
+        isinstance(n, ast.Attribute)
+        and n.attr in ("split_round_key", "ROUND_KEY_LANES")
+        for n in ast.walk(pf.tree))
+    lane_vars = set(_LANE_VAR_NAMES) if in_lane_code else set()
+    for node in ast.walk(pf.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            if terminal(call_name(node.value, pf.imports)) in lane_split_fns:
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        lane_vars.add(t.id)
+    func_of = {}
+    for qual, fn in iter_functions(pf.tree):
+        for node in ast.walk(fn):
+            func_of[id(node)] = qual
+    out: List[Finding] = []
+    for node in ast.walk(pf.tree):
+        if (isinstance(node, ast.Subscript)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in lane_vars
+                and isinstance(node.slice, ast.Constant)
+                and isinstance(node.slice.value, int)):
+            out.append(Finding(
+                rule="RL103", path=pf.path, line=node.lineno,
+                col=node.col_offset,
+                message=(f"lane literal {node.value.id}"
+                         f"[{node.slice.value}]; address lanes as "
+                         f'{node.value.id}[ROUND_KEY_LANES["..."]]'),
+                source=pf.src(node.lineno),
+                symbol=func_of.get(id(node), "<module>")))
+    return out
+
+
+def check_stream_tags(files: List[ParsedFile]) -> List[Finding]:
+    """RL104: repo-wide stream-tag registry.
+
+    Collects every module-level ``*TAG = <int>`` constant and every integer
+    literal passed as the second argument of ``fold_in``. Fails on (a) two
+    constants with the same value, (b) a literal that shadows a constant's
+    value, (c) the same literal folded in from two different modules.
+    """
+    consts: List[Tuple[int, str, str, int]] = []   # (value, name, path, line)
+    literals: List[Tuple[int, str, int]] = []       # (value, path, line)
+    src = {}
+    for pf in files:
+        src[pf.path] = pf
+        for node in pf.tree.body:
+            targets = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                targets = [node.target]
+            for t in targets:
+                if (isinstance(t, ast.Name) and _TAG_CONST.match(t.id)
+                        and isinstance(node.value, ast.Constant)
+                        and isinstance(node.value.value, int)):
+                    consts.append((node.value.value, t.id, pf.path,
+                                   node.lineno))
+        for node in ast.walk(pf.tree):
+            if (isinstance(node, ast.Call)
+                    and terminal(call_name(node, pf.imports)) == "fold_in"
+                    and len(node.args) >= 2
+                    and isinstance(node.args[1], ast.Constant)
+                    and isinstance(node.args[1].value, int)):
+                literals.append((node.args[1].value, pf.path, node.lineno))
+
+    out: List[Finding] = []
+    by_value: Dict[int, Tuple[int, str, str, int]] = {}
+    for value, name, path, line in sorted(consts, key=lambda c: (c[2], c[3])):
+        if value in by_value:
+            _, pname, ppath, _ = by_value[value]
+            out.append(Finding(
+                rule="RL104", path=path, line=line, col=0,
+                message=(f"stream tag {name} = {value:#x} duplicates "
+                         f"{pname} in {ppath}; streams would collide"),
+                source=src[path].src(line), symbol=name))
+        else:
+            by_value[value] = (value, name, path, line)
+
+    lit_seen: Dict[int, Tuple[str, int]] = {}
+    for value, path, line in sorted(literals, key=lambda c: (c[1], c[2])):
+        if value in by_value:
+            _, pname, ppath, _ = by_value[value]
+            out.append(Finding(
+                rule="RL104", path=path, line=line, col=0,
+                message=(f"magic fold_in tag {value:#x} duplicates constant "
+                         f"{pname} ({ppath}); reference the constant"),
+                source=src[path].src(line)))
+        elif value in lit_seen and lit_seen[value][0] != path:
+            ppath, pline = lit_seen[value]
+            out.append(Finding(
+                rule="RL104", path=path, line=line, col=0,
+                message=(f"fold_in tag {value:#x} already used in "
+                         f"{ppath}:{pline}; register a distinct *TAG "
+                         "constant per stream"),
+                source=src[path].src(line)))
+        else:
+            lit_seen.setdefault(value, (path, line))
+    return out

@@ -1,0 +1,139 @@
+"""Trace-safety checkers (RL201-RL205).
+
+``_build_cohort_core`` returns the closure that ``lax.scan``/``jit``
+compiles; anything reachable from it runs under tracing, where Python
+control flow on traced values, host coercions, data-dependent shapes and
+callbacks either crash (ConcretizationTypeError) or silently punch holes
+in the compiled graph. RL201/202/205 are scoped to the reachable set via
+the over-approximating call graph; RL203/204 (dynamic shapes) are unsafe
+under jit anywhere in ``src/`` and are checked file-wide.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from tools.repro_lint.astutil import ParsedFile, call_name, walk_own
+from tools.repro_lint.callgraph import CallGraph, build_graph
+from tools.repro_lint.findings import Finding
+
+#: dotted prefixes whose call results are traced values
+_TRACED_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.random.", "jax.nn.")
+
+_SIZE_REQUIRED = {
+    "jax.numpy.nonzero", "jax.numpy.flatnonzero", "jax.numpy.argwhere",
+    "jax.numpy.unique",
+}
+
+_HOST_CALLS = {
+    "jax.device_get", "jax.device_put", "jax.pure_callback",
+    "jax.experimental.io_callback", "jax.debug.callback",
+    "jax.experimental.host_callback.call",
+}
+
+
+def _has_traced_call(node: ast.AST, imports) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            dotted = call_name(sub, imports)
+            if dotted and (dotted.startswith(_TRACED_PREFIXES)
+                           or dotted in ("jax.numpy", "jax.lax")):
+                return True
+    return False
+
+
+def check_file_trace(pf: ParsedFile) -> List[Finding]:
+    """File-wide rules: RL203 (dynamic-shape ops) and RL204 (boolean-mask
+    indexing)."""
+    out: List[Finding] = []
+    for node in ast.walk(pf.tree):
+        if isinstance(node, ast.Call):
+            dotted = call_name(node, pf.imports)
+            if dotted in _SIZE_REQUIRED:
+                if not any(kw.arg == "size" for kw in node.keywords):
+                    out.append(Finding(
+                        rule="RL203", path=pf.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=(f"{dotted} without size= has a "
+                                 "data-dependent output shape; pass "
+                                 "size=/fill_value="),
+                        source=pf.src(node.lineno)))
+            elif dotted == "jax.numpy.where" and len(node.args) == 1 \
+                    and not node.keywords:
+                out.append(Finding(
+                    rule="RL203", path=pf.path, line=node.lineno,
+                    col=node.col_offset,
+                    message=("1-arg jnp.where is jnp.nonzero in disguise "
+                             "(data-dependent shape); use the 3-arg form "
+                             "or nonzero(size=...)"),
+                    source=pf.src(node.lineno)))
+        elif isinstance(node, ast.Subscript):
+            idx = node.slice
+            elems = idx.elts if isinstance(idx, ast.Tuple) else [idx]
+            for e in elems:
+                if isinstance(e, (ast.Compare, ast.BoolOp)) or (
+                        isinstance(e, ast.UnaryOp)
+                        and isinstance(e.op, ast.Not)):
+                    out.append(Finding(
+                        rule="RL204", path=pf.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=("boolean-mask indexing has a "
+                                 "data-dependent shape under jit; use "
+                                 "jnp.where(mask, x, fill) instead"),
+                        source=pf.src(node.lineno)))
+                    break
+    return out
+
+
+def check_reachable(files: List[ParsedFile], trace_roots,
+                    graph: CallGraph = None) -> List[Finding]:
+    """RL201/202/205 over code reachable from the trace roots."""
+    if graph is None:
+        graph = build_graph(files)
+    reach: Set[str] = graph.reachable(set(trace_roots))
+    out: List[Finding] = []
+    for key in sorted(reach):
+        fn = graph.nodes[key]
+        imports = fn.pf.imports
+        for node in walk_own(fn.node):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                test = node.test
+                if _has_traced_call(test, imports):
+                    kind = {ast.If: "if", ast.While: "while",
+                            ast.IfExp: "ternary"}[type(node)]
+                    out.append(Finding(
+                        rule="RL201", path=fn.path, line=test.lineno,
+                        col=test.col_offset,
+                        message=(f"Python {kind} on a traced value in "
+                                 "cohort-core-reachable code; use "
+                                 "jnp.where/lax.cond"),
+                        source=fn.pf.src(test.lineno), symbol=fn.qualname))
+            elif isinstance(node, ast.Call):
+                dotted = call_name(node, imports)
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "item" and not node.args:
+                    out.append(Finding(
+                        rule="RL202", path=fn.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=(".item() forces a host transfer in "
+                                 "cohort-core-reachable code"),
+                        source=fn.pf.src(node.lineno), symbol=fn.qualname))
+                elif isinstance(node.func, ast.Name) and \
+                        node.func.id in ("float", "int", "bool") and \
+                        node.args and \
+                        _has_traced_call(node.args[0], imports):
+                    out.append(Finding(
+                        rule="RL202", path=fn.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=(f"{node.func.id}() on a traced value in "
+                                 "cohort-core-reachable code"),
+                        source=fn.pf.src(node.lineno), symbol=fn.qualname))
+                elif dotted in _HOST_CALLS or (
+                        dotted and dotted.startswith("numpy.")):
+                    out.append(Finding(
+                        rule="RL205", path=fn.path, line=node.lineno,
+                        col=node.col_offset,
+                        message=(f"host op {dotted} in cohort-core-"
+                                 "reachable code"),
+                        source=fn.pf.src(node.lineno), symbol=fn.qualname))
+    return out

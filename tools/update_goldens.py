@@ -34,6 +34,12 @@ import json
 import os
 import sys
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from tools._cli import ROOT, add_src_to_path
+
 if __name__ == "__main__":
     # generation always happens on the 8-device host platform so the
     # sharded cases shard for real; must win the race with jax import
@@ -42,14 +48,11 @@ if __name__ == "__main__":
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + " --xla_force_host_platform_device_count=8")
-    sys.path.insert(0, os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+    add_src_to_path()
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 GOLDEN_PATH = os.path.join(ROOT, "tests", "goldens", "golden_digests.json")
 
 # the shared fast-tier FL problem (mirrors tests/test_trainer_api.py BASE)
